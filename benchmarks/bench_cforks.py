@@ -1,0 +1,77 @@
+"""cFork scaling benchmarks: Fig 8 (parent perf with many cForks) and Fig 9
+(metadata-layer technique ablation: BoltNaiveCF vs Bolt-ET vs Bolt)."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.core.metadata import MetadataState
+
+from .common import Row
+
+_BATCH = 256
+_OFFS = tuple(range(0, _BATCH * 8, 8))
+_LENS = tuple([8] * _BATCH)
+
+
+def _metadata_append_tput(state: MetadataState, root: int, n_ops: int,
+                          fork_ids: List[int]) -> float:
+    """Append ops/s on the root, with interleaved tail reads on forks (the
+    lazy path is only exercised when fork tails are observed)."""
+    t0 = time.perf_counter()
+    for i in range(n_ops):
+        state.apply(("append", root, f"t{i}", _OFFS, _LENS))
+        if fork_ids and i % 4 == 0:
+            state.tail(fork_ids[i % len(fork_ids)])
+    return n_ops / (time.perf_counter() - t0)
+
+
+def bench_many_cforks() -> List[Row]:
+    """Fig 8a: root append throughput with 0/10/100 cForks (Bolt)."""
+    rows: List[Row] = []
+    base = None
+    for n_forks in (0, 10, 100):
+        state = MetadataState(cf_mode="ltt")
+        root = state.apply(("create_root", "r"))
+        forks = [state.apply(("cfork", root, False)) for _ in range(n_forks)]
+        tput = _metadata_append_tput(state, root, 2000, forks)
+        if base is None:
+            base = tput
+        rows.append((f"fig8a/root_append/cforks={n_forks}", 1e6 / tput,
+                     f"{tput:.0f} ops/s ({tput / base:.2f}x of no-fork)"))
+    # Fig 8b: 32 root logs, 100 cForks each
+    state = MetadataState(cf_mode="ltt")
+    roots = [state.apply(("create_root", f"r{i}")) for i in range(32)]
+    for r in roots:
+        for _ in range(100):
+            state.apply(("cfork", r, False))
+    t0 = time.perf_counter()
+    n = 2000
+    for i in range(n):
+        state.apply(("append", roots[i % 32], f"t{i}", _OFFS, _LENS))
+    tput = n / (time.perf_counter() - t0)
+    rows.append(("fig8b/32roots_100cforks_each", 1e6 / tput,
+                 f"{tput:.0f} ops/s across 32 roots"))
+    return rows
+
+
+def bench_cfork_ablation() -> List[Row]:
+    """Fig 9: metadata-layer throughput at 10/100/1000 cForks for
+    BoltNaiveCF (index copies), Bolt-ET (eager tails), Bolt (lazy LTT)."""
+    rows: List[Row] = []
+    for n_forks in (10, 100, 1000):
+        for mode, tag in (("naive", "BoltNaiveCF"), ("eager", "Bolt-ET"),
+                          ("ltt", "Bolt")):
+            if mode == "naive" and n_forks == 1000:
+                n_ops = 50   # naive at 1000 forks is painfully slow by design
+            else:
+                n_ops = 600
+            state = MetadataState(cf_mode=mode)
+            root = state.apply(("create_root", "r"))
+            forks = [state.apply(("cfork", root, False))
+                     for _ in range(n_forks)]
+            tput = _metadata_append_tput(state, root, n_ops, forks)
+            rows.append((f"fig9/metadata_tput/{tag}/cforks={n_forks}",
+                         1e6 / tput, f"{tput:.0f} append-batches/s"))
+    return rows

@@ -1,0 +1,148 @@
+"""Fork-creation benchmarks: Fig 5 (latency vs log length), Fig 6 (parent
+throughput during fork creation), Fig 11 (promote latency), Fig 10 (recursive
+lookup vs depth), §6.5 (metadata memory)."""
+
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.core import BoltSystem
+from repro.core.metadata import MetadataState
+
+from .common import RECORD, Row, fill_root, timeit
+
+
+def bench_fork_latency() -> List[Row]:
+    """Fig 5: Bolt zero-metadata-copy vs BoltMetaCpy, varying parent length."""
+    rows: List[Row] = []
+    for n in (1_000, 10_000, 100_000, 1_000_000):
+        bolt = BoltSystem()
+        log = fill_root(bolt, "r", n)
+        forks = []
+        us = timeit(lambda: forks.append(log.sfork()), n=5)
+        rows.append((f"fig5/fork_latency/bolt/n={n}", us, "zero-metadata-copy"))
+    for n in (1_000, 10_000, 100_000):
+        mc = BoltSystem(fork_mode="metacopy")
+        log = fill_root(mc, "r", n)
+        us = timeit(lambda: log.sfork(), n=3)
+        rows.append((f"fig5/fork_latency/metacopy/n={n}", us, "copies index"))
+    return rows
+
+
+def bench_fork_impact() -> List[Row]:
+    """Fig 6: parent append throughput while 100 forks are created."""
+    rows: List[Row] = []
+    for mode, tag in (("zerocopy", "bolt"), ("metacopy", "metacopy")):
+        sys_ = BoltSystem(fork_mode=mode)
+        log = fill_root(sys_, "r", 50_000)
+        batch = [RECORD] * 64
+        # steady state
+        t0 = time.perf_counter()
+        for _ in range(50):
+            log.append_batch(batch)
+        steady = 50 * 64 / (time.perf_counter() - t0)
+        # while creating 100 forks interleaved
+        t0 = time.perf_counter()
+        for i in range(100):
+            log.append_batch(batch)
+            log.sfork()
+        during = 100 * 64 / (time.perf_counter() - t0)
+        rows.append((f"fig6/append_tput/{tag}/steady", 1e6 / steady,
+                     f"{steady:.0f} rec/s"))
+        rows.append((f"fig6/append_tput/{tag}/during_forks", 1e6 / during,
+                     f"{during:.0f} rec/s ({during / steady:.2f}x of steady)"))
+    return rows
+
+
+def bench_promote() -> List[Row]:
+    """Fig 11: promote latency vs records-after-fork-point; copy (paper §5.6)
+    vs splice (beyond-paper O(1)) vs temporary-log data copy."""
+    rows: List[Row] = []
+    for n_after in (1_000, 10_000, 100_000):
+        for mode in ("copy", "splice"):
+            sys_ = BoltSystem(promote_mode=mode)
+            log = fill_root(sys_, "r", 10_000)
+            fork = log.cfork(promotable=True)
+            batch = [RECORD] * 500
+            for _ in range(n_after // 500):
+                fork.append_batch(batch)
+            t0 = time.perf_counter()
+            fork.promote()
+            us = (time.perf_counter() - t0) * 1e6
+            rows.append((f"fig11/promote/{mode}/n_after={n_after}", us,
+                         "metadata-only"))
+        # temporary-log approach: copy the DATA records across logs
+        sys_ = BoltSystem()
+        log = fill_root(sys_, "r", 10_000)
+        tmp = sys_.create_log("tmp")
+        batch = [RECORD] * 500
+        for _ in range(n_after // 500):
+            tmp.append_batch(batch)
+        t0 = time.perf_counter()
+        for lo in range(0, n_after, 500):
+            recs = tmp.read(lo, lo + 500)
+            log.append_batch(recs)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"fig11/promote/datacopy/n_after={n_after}", us,
+                     "temporary-log (no stateful validation)"))
+    return rows
+
+
+def bench_lookup_depth() -> List[Row]:
+    """Fig 10: recursive HLI lookup latency vs cFork nesting depth."""
+    rows: List[Row] = []
+    state = MetadataState()
+    root = state.apply(("create_root", "r"))
+    per_level = 20_000
+    batch = 512
+    log_id = root
+    depths = {0: root}
+    for depth in range(1, 8):
+        for start in range(0, per_level, batch):
+            state.apply(("append", log_id, f"o{depth}-{start}",
+                         tuple(range(0, batch * 8, 8)), tuple([8] * batch)))
+        log_id = state.apply(("cfork", log_id, False))
+        depths[depth] = log_id
+    # query the deepest log at a position that recurses to the root
+    deepest = depths[7]
+    for depth_hit in (1, 3, 5, 7):
+        # position inside the level `7 - depth_hit` ancestor's local records
+        pos = (7 - depth_hit) * per_level + per_level // 2
+        us = timeit(lambda: state.read_spans(deepest, pos, pos + 1), n=2000)
+        rows.append((f"fig10/lookup/depth={depth_hit}", us,
+                     "recursive HLI lookup"))
+    return rows
+
+
+def bench_metadata_memory() -> List[Row]:
+    """§6.5: metadata bytes for many cForks of a busy root: naive duplication
+    vs Bolt (run-compressed HLI + tail-only updates)."""
+    rows: List[Row] = []
+    # Bolt: 1000 cForks, 1M records
+    state = MetadataState(cf_mode="ltt")
+    root = state.apply(("create_root", "r"))
+    for _ in range(1000):
+        state.apply(("cfork", root, False))
+    batch = 1024
+    offs = tuple(range(0, batch * 8, 8))
+    lens = tuple([8] * batch)
+    for i in range(1_000_000 // batch):
+        state.apply(("append", root, f"o{i}", offs, lens))
+    bolt_bytes = state.metadata_bytes()
+    rows.append(("mem65/bolt/1000forks_1M", float(bolt_bytes),
+                 f"{bolt_bytes / 1e6:.1f} MB"))
+    # naive: scaled run (100 forks x 100k records), extrapolated linearly
+    state = MetadataState(cf_mode="naive")
+    root = state.apply(("create_root", "r"))
+    for _ in range(100):
+        state.apply(("cfork", root, False))
+    for i in range(100_000 // batch):
+        state.apply(("append", root, f"o{i}", offs, lens))
+    naive_bytes = state.metadata_bytes()
+    scaled = naive_bytes * 10 * 10  # x10 forks, x10 records
+    rows.append(("mem65/naive/100forks_100k", float(naive_bytes),
+                 f"{naive_bytes / 1e6:.1f} MB measured"))
+    rows.append(("mem65/naive/extrapolated_1000forks_1M", float(scaled),
+                 f"{scaled / 1e9:.2f} GB (x{scaled / max(bolt_bytes, 1):.0f} of Bolt)"))
+    return rows

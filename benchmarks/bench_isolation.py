@@ -1,0 +1,83 @@
+"""Fig 7 isolation benchmark (deterministic DES; see core/sim.py).
+
+A latency-critical (lc) workload appends at a fixed rate while an analytics
+agent issues bursts of bulk reads. In Bolt the agent's fork lives on its own
+broker and bulk data comes from the scalable shared store (64-wide service
+pool, ~2% utilization); in the Kafka-like baseline both workloads share one
+stateful broker and its disk (~70% utilization during bursts). Metadata-layer
+costs are measured for real elsewhere; here *contention* is what is modeled.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.core.sim import Resource, ServiceTimes, summarize
+
+from .common import Row
+
+S = ServiceTimes()
+LC_RATE = 2000.0          # lc ops/s
+LC_OPS = 4000             # simulated lc ops (2 s window)
+REC_KB = 4.0
+BULK_KB = 256.0
+AGENT_BURSTS = 8
+BURST_READS = 200
+BURST_SPACING = 2e-4      # 5k req/s within a burst (open loop)
+
+
+def _run(shared: bool, with_agent: bool):
+    """Events MUST be processed in arrival order (the Resource queues are
+    chronological), so the lc and agent streams are merged before submission."""
+    lc_broker = Resource()
+    disk = Resource() if shared else None
+    ag_broker = lc_broker if shared else Resource()
+    store = Resource(servers=64)   # S3-like: scales with demand (§5.1)
+    window = LC_OPS / LC_RATE
+    events = [(i / LC_RATE, "lc") for i in range(LC_OPS)]
+    if with_agent:
+        for b in range(AGENT_BURSTS):
+            t0 = b * window / AGENT_BURSTS
+            events += [(t0 + i * BURST_SPACING, "agent")
+                       for i in range(BURST_READS)]
+    events.sort()
+    lat = []
+    for arr, kind in events:
+        if kind == "agent":
+            t = ag_broker.submit(arr, S.broker_cpu_per_req
+                                 + S.broker_cpu_per_kb * BULK_KB)
+            if shared:
+                disk.submit(t, S.disk_seek + S.disk_read_per_kb * BULK_KB)
+            else:
+                store.submit(t, S.store_get_base + S.store_get_per_kb * BULK_KB)
+        else:
+            t = lc_broker.submit(arr, S.broker_cpu_per_req
+                                 + S.broker_cpu_per_kb * REC_KB)
+            if shared:
+                t = disk.submit(t, S.disk_seek + S.disk_read_per_kb * REC_KB)
+            else:
+                t = store.submit(t, S.store_put_base
+                                 + S.store_put_per_kb * REC_KB)
+            t += S.metadata_op + S.net_rtt
+            lat.append(t - arr)
+    return summarize(lat)
+
+
+def bench_isolation() -> List[Row]:
+    rows: List[Row] = []
+    mean0, _p, p99_0 = _run(shared=False, with_agent=False)
+    rows.append(("fig7/lc_alone/mean", mean0 * 1e6, "diskless, no agent"))
+    rows.append(("fig7/lc_alone/p99", p99_0 * 1e6, ""))
+
+    mean_b, _p, p99_b = _run(shared=False, with_agent=True)
+    rows.append(("fig7/bolt_with_agent/mean", mean_b * 1e6,
+                 f"{mean_b / mean0:.2f}x of alone"))
+    rows.append(("fig7/bolt_with_agent/p99", p99_b * 1e6,
+                 f"{p99_b / p99_0:.2f}x of alone"))
+
+    mean_k, _p, p99_k = _run(shared=True, with_agent=True)
+    rows.append(("fig7/kafka_with_agent/mean", mean_k * 1e6,
+                 f"{mean_k / mean_b:.1f}x of Bolt"))
+    rows.append(("fig7/kafka_with_agent/p99", p99_k * 1e6,
+                 f"{p99_k / p99_b:.1f}x of Bolt"))
+    return rows

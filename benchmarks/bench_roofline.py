@@ -1,0 +1,40 @@
+"""Roofline table reader: summarizes results/*.json from the dry-run."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+from .common import Row
+
+RESULTS_DIR = os.environ.get("DRYRUN_RESULTS", "results")
+
+
+def bench_roofline() -> List[Row]:
+    rows: List[Row] = []
+    files = sorted(glob.glob(f"{RESULTS_DIR}/*.json"))
+    if not files:
+        return [("roofline/none", 0.0,
+                 "no dry-run results (run repro.launch.dryrun first)")]
+    for fn in files:
+        with open(fn) as f:
+            d = json.load(f)
+        tag = f"{d['arch']}/{d['shape']}/{d['mesh']}"
+        if "baseline" not in fn:
+            tag += "/" + os.path.basename(fn).rsplit("__", 1)[1].replace(".json", "")
+        if d.get("status") == "skip":
+            rows.append((f"roofline/{tag}", 0.0, f"SKIP: {d['reason']}"))
+            continue
+        r = d["roofline"]
+        dom = d["dominant"].replace("_s", "")
+        step = max(r.values())
+        frac = d["roofline"]["compute_s"] * d["useful_flops_ratio"] / step
+        rows.append((
+            f"roofline/{tag}",
+            step * 1e6,
+            f"dom={dom} compute={r['compute_s']:.2f}s mem={r['memory_s']:.2f}s "
+            f"coll={r['collective_s']:.2f}s useful={d['useful_flops_ratio']:.2f} "
+            f"roofline_frac={frac:.3f} peakGB={d['memory']['peak_bytes_per_device'] / 1e9:.1f}"))
+    return rows

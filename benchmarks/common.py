@@ -1,0 +1,35 @@
+"""Shared helpers for the benchmark suite."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+Row = Tuple[str, float, str]  # (name, us_per_call, derived)
+
+RECORD = b"x" * 256  # benchmark record payload (paper uses 4KB; scaled for CPU)
+
+
+def timeit(fn: Callable[[], None], n: int, warmup: int = 1) -> float:
+    """Mean wall-clock microseconds per call."""
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def fill_root(system, name: str, n_records: int, batch: int = 1024):
+    log = system.create_log(name)
+    rec = RECORD
+    full, rem = divmod(n_records, batch)
+    for _ in range(full):
+        log.append_batch([rec] * batch)
+    if rem:
+        log.append_batch([rec] * rem)
+    return log
+
+
+def fmt(rows: List[Row]) -> str:
+    return "\n".join(f"{n},{v:.3f},{d}" for n, v, d in rows)

@@ -1,0 +1,58 @@
+"""Benchmark harness — one benchmark per paper table/figure (DESIGN.md §8).
+
+Prints ``name,us_per_call,derived`` CSV. Usage:
+    PYTHONPATH=src python -m benchmarks.run [--only substring]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from .bench_agents import bench_agents
+from .bench_cforks import bench_cfork_ablation, bench_many_cforks
+from .bench_forks import (bench_fork_impact, bench_fork_latency,
+                          bench_lookup_depth, bench_metadata_memory,
+                          bench_promote)
+from .bench_isolation import bench_isolation
+from .bench_pipeline import bench_pipeline
+from .bench_roofline import bench_roofline
+
+ALL = [
+    ("fig5_fork_latency", bench_fork_latency),
+    ("fig6_fork_impact", bench_fork_impact),
+    ("fig7_isolation", bench_isolation),
+    ("fig8_many_cforks", bench_many_cforks),
+    ("fig9_cfork_ablation", bench_cfork_ablation),
+    ("fig10_lookup_depth", bench_lookup_depth),
+    ("fig11_promote", bench_promote),
+    ("mem65_metadata_memory", bench_metadata_memory),
+    ("fig12_14_agents", bench_agents),
+    ("data_pipeline", bench_pipeline),
+    ("roofline", bench_roofline),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = []
+    for name, fn in ALL:
+        if args.only and args.only not in name:
+            continue
+        try:
+            for row_name, val, derived in fn():
+                print(f"{row_name},{val:.3f},{derived}", flush=True)
+        except Exception as e:  # keep the harness running
+            failed.append(name)
+            traceback.print_exc(file=sys.stderr)
+            print(f"{name}/ERROR,0.0,{type(e).__name__}: {e}", flush=True)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Quickstart: the AgileLog abstraction in 60 lines (paper §4.1, Fig. 2).
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+from repro.core import BoltSystem
+from repro.core.errors import ForkBlocked
+
+system = BoltSystem(n_brokers=4)
+log = system.create_log("orders")
+
+# 1. the traditional shared-log API
+for i in range(5):
+    log.append(f"order-{i}".encode())
+print("root:", log.read(0, log.tail))
+
+# 2. continuous fork (Fig 2a/2b): inherits live appends, private writes
+agent_view = log.cfork()
+log.append(b"order-5")                      # lands on the parent...
+agent_view.log if False else None
+print("cfork sees parent append:", agent_view.read(5, 6))   # ...and the fork
+agent_view.append(b"agent-note")            # private to the fork
+print("parent tail:", log.tail, "| fork tail:", agent_view.tail)
+
+# 3. severed fork from a past offset (Fig 2c/2d): frozen what-if sandbox
+snapshot = log.sfork(past=2)
+print("sfork snapshot:", snapshot.read(0, snapshot.tail))
+
+# 4. promotable cFork: isolate -> validate -> promote (Fig 2e)
+candidate = log.cfork(promotable=True)
+candidate.append(b"restock-widget")
+log.append(b"order-6")                      # producers keep appending
+try:
+    log.read(0, log.tail)                   # ...but reads beyond fp block
+except ForkBlocked as e:
+    print("parent read blocked during validation:", type(e).__name__)
+# validation = read the fork: history + live orders + agent writes, interleaved
+print("validation view:", candidate.read(5, candidate.tail))
+candidate.promote()
+print("after promote:", log.read(5, log.tail))
+
+# 5. exploration: many promotable forks, first promote wins
+a = log.cfork(promotable=True)
+b = log.cfork(promotable=True)
+a.append(b"path-A")
+b.append(b"path-B")
+a.promote()                                 # b is squashed automatically
+print("chosen path:", log.read(log.tail - 1, log.tail))
+print("metadata bytes:", system.metadata.state.metadata_bytes())

@@ -1,0 +1,42 @@
+"""Render the §Roofline markdown table from results/*.json."""
+
+import glob
+import json
+import sys
+
+SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+
+
+def load(tag="baseline", d="results"):
+    rows = []
+    for fn in sorted(glob.glob(f"{d}/*__{tag}.json")):
+        rows.append(json.load(open(fn)))
+    return rows
+
+
+def main(tag="baseline", d="results"):
+    rows = load(tag, d)
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.get(r["shape"], 9), r["mesh"]))
+    print("| arch | shape | mesh | compute (s) | memory (s) | collective (s) "
+          "| dominant | 6ND/HLO | roofline frac | GB/dev | note |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r["status"] == "skip":
+            print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — | — | — "
+                  f"| — | — | — | skip: {r['reason'][:48]} |")
+            continue
+        t = r["roofline"]
+        step = max(t.values())
+        frac = t["compute_s"] * r["useful_flops_ratio"] / step if step else 0
+        note = ""
+        if r["memory"]["peak_bytes_per_device"] > 16e9:
+            note = f"over 16GB HBM"
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+              f"| {t['compute_s']:.3f} | {t['memory_s']:.3f} "
+              f"| {t['collective_s']:.3f} | {r['dominant'].replace('_s','')} "
+              f"| {r['useful_flops_ratio']:.3f} | {frac:.4f} "
+              f"| {r['memory']['peak_bytes_per_device']/1e9:.1f} | {note} |")
+
+
+if __name__ == "__main__":
+    main(*(sys.argv[1:] or []))

@@ -1,0 +1,17 @@
+"""qwen3-8b [dense] — qk_norm, GQA. [hf:Qwen/Qwen3-8B; hf]
+
+36L d_model=4096 32H (GQA kv=8) d_ff=12288 vocab=151936, head_dim=128.
+kv_repeat=2 -> 16 effective kv heads for TP-16.
+"""
+from ..models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-8b", n_layers=36, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=12288, vocab_size=151936, head_dim=128, qk_norm=True,
+    rope_theta=1_000_000.0, kv_repeat=2,
+)
+
+SMOKE = ModelConfig(
+    name="qwen3-8b-smoke", n_layers=3, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=128, vocab_size=512, head_dim=16, qk_norm=True,
+)

@@ -1,0 +1,20 @@
+"""AgileLog / Bolt — the paper's primary contribution.
+
+Layers (bottom-up):
+  objectstore — S3-like shared storage (diskless substrate)
+  index       — Hierarchical Log Index (HLI) run entries + naive variants
+  ltt         — Lazy Tail Tree (Euler tour in a treap, lazy range updates)
+  metadata    — the SMR state machine: forks, promote, squash, reads
+  raft        — replicated metadata service (majority commit, failover)
+  broker      — stateless brokers (append batching, object cache, DES hooks)
+  api         — the AgileLog interface (Fig. 1) + BoltSystem wiring
+  sim         — deterministic DES used by isolation benchmarks
+"""
+
+from .api import AgileLog, BoltSystem
+from .errors import AgileLogError, ForkBlocked, InvalidOperation, UnknownLog
+
+__all__ = [
+    "AgileLog", "BoltSystem",
+    "AgileLogError", "ForkBlocked", "InvalidOperation", "UnknownLog",
+]

@@ -1,0 +1,146 @@
+"""The AgileLog abstraction (Fig. 1) and the Bolt system wiring it together.
+
+``BoltSystem`` owns the shared object store, a broker pool, and the replicated
+metadata service. ``AgileLog`` is the client handle implementing the paper's
+interface verbatim::
+
+    interface AgileLog:
+      Position append(Record r);
+      List<Record> read(Position from, Position to);
+      AgileLog cFork(promotable = false);
+      AgileLog sFork(optional Position past);
+      bool promote();
+      void squash();
+
+Fork placement policy (§5.7): a fork is served by a broker *different from its
+parent's* (performance isolation) but forks of the same parent are co-located
+(cache reuse, less metadata-layer load) unless ``dedicated=True``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from .broker import Broker
+from .errors import InvalidOperation
+from .objectstore import MemoryObjectStore, ObjectStore
+from .raft import MetadataService
+
+
+class BoltSystem:
+    def __init__(self, n_brokers: int = 4, store: Optional[ObjectStore] = None,
+                 n_meta_replicas: int = 3, snapshot_every: int = 0,
+                 cf_mode: str = "ltt", fork_mode: str = "zerocopy",
+                 promote_mode: str = "copy") -> None:
+        self.store = store if store is not None else MemoryObjectStore()
+        self.metadata = MetadataService(
+            n_replicas=n_meta_replicas, snapshot_every=snapshot_every,
+            cf_mode=cf_mode, fork_mode=fork_mode, promote_mode=promote_mode)
+        self.brokers = [Broker(i, self.store, self.metadata)
+                        for i in range(max(2, n_brokers))]
+        self._fork_broker: Dict[int, int] = {}   # parent log -> broker for its forks
+        self._next_broker = 1
+
+    # -- placement ----------------------------------------------------------------
+    def _broker_for_root(self) -> Broker:
+        return self.brokers[0]
+
+    def _broker_for_fork(self, parent_log: int, parent_broker: int,
+                         dedicated: bool) -> Broker:
+        if dedicated:
+            b = self._next_broker
+            self._next_broker = (self._next_broker % (len(self.brokers) - 1)) + 1
+            if b == parent_broker:
+                b = (b % (len(self.brokers) - 1)) + 1
+            return self.brokers[b]
+        b = self._fork_broker.get(parent_log)
+        if b is None or b == parent_broker:
+            b = self._next_broker
+            self._next_broker = (self._next_broker % (len(self.brokers) - 1)) + 1
+            if b == parent_broker:
+                b = (b % (len(self.brokers) - 1)) + 1
+            self._fork_broker[parent_log] = b
+        return self.brokers[b]
+
+    # -- entry point ----------------------------------------------------------------
+    def create_log(self, name: str) -> "AgileLog":
+        log_id = self.metadata.propose(("create_root", name))
+        return AgileLog(self, log_id, self._broker_for_root())
+
+    # -- broker failover (straggler mitigation, DESIGN.md §6) -----------------------
+    def fail_broker(self, broker_id: int) -> None:
+        """Mark a broker dead; clients transparently re-route (brokers are
+        stateless — §5.2 — so reassignment is metadata-free; the object cache
+        is the only loss)."""
+        self._dead = getattr(self, "_dead", set())
+        self._dead.add(broker_id)
+        for parent, b in list(self._fork_broker.items()):
+            if b == broker_id:
+                del self._fork_broker[parent]
+
+    def live_broker(self, preferred: Broker) -> Broker:
+        dead = getattr(self, "_dead", set())
+        if preferred.broker_id not in dead:
+            return preferred
+        for b in self.brokers:
+            if b.broker_id not in dead:
+                return b
+        raise RuntimeError("no live brokers")
+
+
+class AgileLog:
+    """Client handle for one log (root or fork). Figure 1's interface."""
+
+    def __init__(self, system: BoltSystem, log_id: int, broker: Broker) -> None:
+        self.system = system
+        self.log_id = log_id
+        self.broker = broker
+
+    # -- traditional shared-log API --------------------------------------------------
+    def _b(self) -> Broker:
+        """Current broker, re-routed if ours failed (stateless brokers)."""
+        b = self.system.live_broker(self.broker)
+        if b is not self.broker:
+            self.broker = b
+        return b
+
+    def append(self, record: bytes) -> Optional[int]:
+        positions, _ = self._b().append(self.log_id, [record])
+        return None if positions is None else positions[0]
+
+    def append_batch(self, records: Sequence[bytes]) -> Optional[List[int]]:
+        positions, _ = self._b().append(self.log_id, list(records))
+        return positions
+
+    def read(self, lo: int, hi: int) -> List[bytes]:
+        return self._b().read_records(self.log_id, lo, hi)
+
+    @property
+    def tail(self) -> int:
+        return self.system.metadata.state.tail(self.log_id)
+
+    @property
+    def visible_tail(self) -> int:
+        return self.system.metadata.state.visible_tail(self.log_id)
+
+    # -- forking -----------------------------------------------------------------------
+    def cfork(self, promotable: bool = False, dedicated: bool = False) -> "AgileLog":
+        child_id = self.system.metadata.propose(("cfork", self.log_id, promotable))
+        broker = self.system._broker_for_fork(self.log_id, self.broker.broker_id,
+                                              dedicated)
+        return AgileLog(self.system, child_id, broker)
+
+    def sfork(self, past: Optional[int] = None, dedicated: bool = False) -> "AgileLog":
+        child_id = self.system.metadata.propose(("sfork", self.log_id, past))
+        broker = self.system._broker_for_fork(self.log_id, self.broker.broker_id,
+                                              dedicated)
+        return AgileLog(self.system, child_id, broker)
+
+    def promote(self, mode: Optional[str] = None) -> bool:
+        return self.system.metadata.propose(("promote", self.log_id, mode))
+
+    def squash(self) -> None:
+        self.system.metadata.propose(("squash", self.log_id))
+
+    def __repr__(self) -> str:
+        return f"AgileLog(id={self.log_id}, broker={self.broker.broker_id})"

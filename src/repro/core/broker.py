@@ -1,0 +1,115 @@
+"""Stateless brokers (§5.2-5.3): the diskless data plane.
+
+A broker owns no durable state: appends batch client records into a single
+object, PUT it to shared storage, then sequence the per-record metadata through
+the metadata layer (steps a1-a7 of Fig. 3). Reads resolve byte spans at the
+metadata layer and ranged-GET them from shared storage through a local object
+cache (r1-r7).
+
+Brokers double as DES resources for the isolation benchmarks: when a
+:class:`~repro.core.sim.Simulator` is attached, each operation also books
+simulated service time on this broker's queue (and the shared store's), which
+is how contention (or its absence) is measured without real hardware.
+"""
+
+from __future__ import annotations
+
+import itertools
+from typing import List, Optional, Sequence, Tuple
+
+from .objectstore import LRUObjectCache, ObjectStore
+from .sim import Resource, ServiceTimes, Simulator
+
+_obj_counter = itertools.count()
+
+
+class Broker:
+    def __init__(self, broker_id: int, store: ObjectStore, metadata,
+                 cache_bytes: int = 64 << 20,
+                 sim: Optional[Simulator] = None,
+                 service: Optional[ServiceTimes] = None,
+                 store_resource: Optional[Resource] = None) -> None:
+        self.broker_id = broker_id
+        self.store = store
+        self.metadata = metadata
+        self.cache = LRUObjectCache(store, cache_bytes)
+        # DES hooks
+        self.sim = sim
+        self.service = service or ServiceTimes()
+        self.cpu = Resource(servers=1)
+        self.store_resource = store_resource
+        self.appends = 0
+        self.reads = 0
+
+    # -- data path ----------------------------------------------------------------
+    def append(self, log_id: int, records: Sequence[bytes],
+               arrival: Optional[float] = None) -> Tuple[Optional[List[int]], float]:
+        """Returns (positions-or-None, completion_time). positions is None when
+        an active promotable cFork hides them (§4.1)."""
+        object_id = f"obj-{self.broker_id}-{next(_obj_counter)}"
+        payload = b"".join(records)
+        offsets, lengths, off = [], [], 0
+        for r in records:
+            offsets.append(off)
+            lengths.append(len(r))
+            off += len(r)
+        self.store.put(object_id, payload)
+        positions = self.metadata.propose(
+            ("append", log_id, object_id, tuple(offsets), tuple(lengths)))
+        self.appends += 1
+        done = self._book(arrival, write_bytes=len(payload))
+        return positions, done
+
+    def read(self, log_id: int, lo: int, hi: int,
+             arrival: Optional[float] = None) -> Tuple[List[bytes], float]:
+        spans = self.metadata.state.read_spans(log_id, lo, hi)
+        blobs = self.cache.get_spans(spans)
+        self.reads += 1
+        done = self._book(arrival, read_bytes=sum(len(b) for b in blobs))
+        return blobs, done
+
+    def read_records(self, log_id: int, lo: int, hi: int) -> List[bytes]:
+        """Read and return individual records (one span per record)."""
+        spans = self.metadata.state.read_record_spans(log_id, lo, hi)
+        return [self.cache.get(obj, off, ln) for (obj, off, ln) in spans]
+
+    # -- DES accounting -----------------------------------------------------------
+    def _book(self, arrival: Optional[float], write_bytes: int = 0,
+              read_bytes: int = 0) -> float:
+        if self.sim is None or arrival is None:
+            return 0.0
+        s = self.service
+        t = arrival
+        cpu_time = s.broker_cpu_per_req + s.broker_cpu_per_kb * (write_bytes + read_bytes) / 1024
+        t = self.cpu.submit(t, cpu_time)
+        if self.store_resource is not None:
+            if write_bytes:
+                t = self.store_resource.submit(t, s.store_put_base + s.store_put_per_kb * write_bytes / 1024)
+            if read_bytes:
+                t = self.store_resource.submit(t, s.store_get_base + s.store_get_per_kb * read_bytes / 1024)
+        t += s.metadata_op + s.net_rtt
+        return t
+
+
+class KafkaLikeBroker(Broker):
+    """Stateful shared-broker baseline (§6.2): all workloads hit the same broker
+    and its local disk, so agentic bulk reads contend with the lc-workload. The
+    'disk' is a single DES resource attached to this broker."""
+
+    def __init__(self, *args, **kwargs) -> None:
+        super().__init__(*args, **kwargs)
+        self.disk = Resource(servers=1)
+
+    def _book(self, arrival: Optional[float], write_bytes: int = 0,
+              read_bytes: int = 0) -> float:
+        if self.sim is None or arrival is None:
+            return 0.0
+        s = self.service
+        t = arrival
+        cpu_time = s.broker_cpu_per_req + s.broker_cpu_per_kb * (write_bytes + read_bytes) / 1024
+        t = self.cpu.submit(t, cpu_time)
+        nbytes = write_bytes + read_bytes
+        if nbytes:
+            t = self.disk.submit(t, s.disk_seek + s.disk_read_per_kb * nbytes / 1024)
+        t += s.metadata_op + s.net_rtt
+        return t

@@ -1,0 +1,21 @@
+"""Error types for the AgileLog abstraction."""
+
+
+class AgileLogError(Exception):
+    """Base class for AgileLog errors."""
+
+
+class UnknownLog(AgileLogError):
+    """Operation on a log id that does not exist (or was squashed/promoted away)."""
+
+
+class ForkBlocked(AgileLogError):
+    """Operation blocked because an active promotable cFork restricts it (§4.1)."""
+
+
+class InvalidOperation(AgileLogError):
+    """Semantically invalid call (e.g. squash of a root log, promote of an sFork)."""
+
+
+class NotLeader(AgileLogError):
+    """Metadata proposal sent to a non-leader replica."""

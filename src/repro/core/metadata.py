@@ -1,0 +1,543 @@
+"""Bolt metadata layer: the SMR state machine (§5.3-5.6).
+
+This is the deterministic state machine replicated by the Raft-like layer
+(:mod:`repro.core.raft`). It owns, per log: the HLI index, the HLI parent
+pointer, and membership in the Lazy Tail Tree. Commands (appends, forks,
+promote, squash) are applied in consensus order — which is exactly what makes
+cFork interleaving *linearizable*: the sequencing order of the single
+metadata log is the order every fork observes.
+
+Variant knobs reproduce the paper's ablations:
+
+* ``cf_mode``:   'ltt'   — Bolt   (tail-only updates, lazy via LazyTailTree)
+                 'eager' — Bolt-ET (tail-only updates, eager per-descendant)
+                 'naive' — BoltNaiveCF (copy index entries into every
+                           descendant on each parent append)
+* ``fork_mode``: 'zerocopy' — Bolt (HLI; child index starts empty)
+                 'metacopy' — BoltMetaCpy (materialize parent's view into the
+                              child index at fork time)
+* ``promote_mode``: 'copy'   — paper-faithful §5.6 (copy post-fp entries)
+                    'splice' — beyond-paper O(1) identity-splice (parent adopts
+                               the child's index; old parent index is frozen as
+                               an internal HLI ancestor)
+
+Blocking semantics for promotable cForks (§4.1/§5.6) are enforced with a
+lazily range-added integer *blocked* counter: while log ``P`` has >=1 active
+promotable cFork, +1 is applied over ``subtree(P)`` and -1 over each promotable
+child's subtree, so: the parent may still append (positions withheld), the
+promotable children operate freely (they must read beyond the fork point to
+validate), and every other descendant's appends/deep reads are blocked.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from .errors import ForkBlocked, InvalidOperation, UnknownLog
+from .index import NaiveIndex, RunIndex, Span
+from .ltt import EagerTailMap, LazyTailTree
+
+
+@dataclass
+class LogMeta:
+    log_id: int
+    name: str
+    kind: str                    # 'root' | 'cfork' | 'sfork' | 'frozen'
+    parent: Optional[int]        # HLI parent (metadata-lookup chain)
+    fork_point: int = 0          # parent position at fork (tail at creation)
+    promotable: bool = False
+    index: object = None         # RunIndex | NaiveIndex
+    hli_children: Set[int] = field(default_factory=set)
+    promotable_forks: Dict[int, int] = field(default_factory=dict)  # child -> fp
+    ltt_parent: Optional[int] = None   # inheritance-tree parent (None = tree root)
+    broker: Optional[int] = None       # broker assignment (set by the system layer)
+    stands_for: Optional[int] = None   # frozen splice stand-in: carries the
+                                       # original log's promotable-edge exemption
+
+    @property
+    def alive(self) -> bool:
+        return self.kind != "frozen"
+
+
+class MetadataState:
+    """Deterministic state machine. `apply(cmd)` for writes, plain methods for reads."""
+
+    def __init__(self, cf_mode: str = "ltt", fork_mode: str = "zerocopy",
+                 promote_mode: str = "copy") -> None:
+        assert cf_mode in ("ltt", "eager", "naive")
+        assert fork_mode in ("zerocopy", "metacopy")
+        assert promote_mode in ("copy", "splice")
+        self.cf_mode = cf_mode
+        self.fork_mode = fork_mode
+        self.promote_mode = promote_mode
+        self.logs: Dict[int, LogMeta] = {}
+        self._next_id = 0
+        if cf_mode == "ltt":
+            self.tails = LazyTailTree(seed=0xB017)
+        else:
+            self.tails = EagerTailMap()
+        # naive/metacopy variants use per-record NaiveIndex
+        self._use_naive_index = cf_mode == "naive" or fork_mode == "metacopy"
+
+    # ------------------------------------------------------------------ utils
+    def _new_index(self):
+        return NaiveIndex() if self._use_naive_index else RunIndex()
+
+    def _get(self, log_id: int, allow_frozen: bool = False) -> LogMeta:
+        meta = self.logs.get(log_id)
+        if meta is None or (not allow_frozen and not meta.alive):
+            raise UnknownLog(f"log {log_id} does not exist")
+        return meta
+
+    def _holds(self, meta: LogMeta) -> int:
+        return len(meta.promotable_forks)
+
+    def _earliest_fp(self, meta: LogMeta) -> int:
+        return min(meta.promotable_forks.values())
+
+    def _blocked_for_ops(self, meta: LogMeta) -> bool:
+        """Is this log blocked by an *ancestor's* promotable fork?"""
+        _tail, blocked = self.tails.get(meta.log_id)
+        own = 1 if self._holds(meta) else 0
+        return blocked - own > 0
+
+    # --------------------------------------------------------------- commands
+    def apply(self, cmd: Tuple) -> object:
+        op = cmd[0]
+        return getattr(self, "_apply_" + op)(*cmd[1:])
+
+    def _apply_create_root(self, name: str) -> int:
+        log_id = self._next_id
+        self._next_id += 1
+        self.logs[log_id] = LogMeta(log_id, name, "root", parent=None,
+                                    index=self._new_index())
+        self.tails.add_root(log_id, tail0=0, blocked0=0)
+        return log_id
+
+    def _apply_append(self, log_id: int, object_id: str,
+                      offsets: Tuple[int, ...], lengths: Tuple[int, ...]) -> Optional[List[int]]:
+        meta = self._get(log_id)
+        if self._blocked_for_ops(meta):
+            raise ForkBlocked(
+                f"appends to log {log_id} are blocked by an ancestor's promotable cFork")
+        tail, _blk = self.tails.get(log_id)
+        k = len(offsets)
+        if self._use_naive_index:
+            for i in range(k):
+                meta.index.add_local(tail + i, (object_id, offsets[i], lengths[i]))
+        else:
+            meta.index.append_run(tail, object_id,
+                                  np.asarray(offsets, dtype=np.int64),
+                                  np.asarray(lengths, dtype=np.int64))
+        if self.cf_mode == "naive":
+            # BoltNaiveCF: duplicate the new entries into EVERY descendant's
+            # index at that descendant's own tail (Fig. 4a), eagerly.
+            for d in self.tails.subtree_ids(log_id):
+                if d == log_id:
+                    continue
+                d_tail, _ = self.tails.get(d)
+                d_index = self.logs[d].index
+                for i in range(k):
+                    d_index.add_copy(d_tail + i, (object_id, offsets[i], lengths[i]))
+        self.tails.range_add(log_id, d_tail=k)
+        if self._holds(meta):
+            return None  # §4.1: positions beyond a promotable fork point are withheld
+        return list(range(tail, tail + k))
+
+    def _check_forkable(self, meta: LogMeta) -> int:
+        if self._blocked_for_ops(meta):
+            raise ForkBlocked(f"log {meta.log_id} is blocked by an ancestor's promotable cFork")
+        tail, _ = self.tails.get(meta.log_id)
+        if self._holds(meta) and tail > self._earliest_fp(meta):
+            raise ForkBlocked(
+                "cannot fork beyond an active promotable cFork's fork point")
+        return tail
+
+    def _materialize_into(self, child_index: NaiveIndex, log_id: int, upto: int) -> None:
+        """BoltMetaCpy: copy the parent's fully-resolved view [0, upto) into the
+        child's index (this is the expensive O(n) path the paper measures)."""
+        for pos in range(upto):
+            child_index.add_copy(pos, self._lookup_one(log_id, pos))
+
+    def _apply_cfork(self, parent_id: int, promotable: bool) -> int:
+        parent = self._get(parent_id)
+        fp = self._check_forkable(parent)
+        child_id = self._next_id
+        self._next_id += 1
+        child = LogMeta(child_id, f"{parent.name}/cf{child_id}", "cfork",
+                        parent=parent_id, fork_point=fp, promotable=promotable,
+                        index=self._new_index(), ltt_parent=parent_id)
+        self.logs[child_id] = child
+        parent.hli_children.add(child_id)
+        _t, parent_blocked = self.tails.get(parent_id)
+        self.tails.add_child(parent_id, child_id, tail0=fp, blocked0=parent_blocked)
+        if self.fork_mode == "metacopy":
+            self._materialize_into(child.index, parent_id, fp)
+        if promotable:
+            if not self._holds(parent):
+                self.tails.range_add(parent_id, d_blocked=+1)  # now incl. child
+            self.tails.range_add(child_id, d_blocked=-1)       # child exempt
+            parent.promotable_forks[child_id] = fp
+        return child_id
+
+    def _apply_sfork(self, parent_id: int, past: Optional[int]) -> int:
+        parent = self._get(parent_id)
+        tail = self._check_forkable(parent)
+        if past is not None:
+            if not (0 <= past < tail):
+                raise InvalidOperation(f"past offset {past} out of range (tail {tail})")
+            fp = past + 1
+        else:
+            fp = tail
+        child_id = self._next_id
+        self._next_id += 1
+        child = LogMeta(child_id, f"{parent.name}/sf{child_id}", "sfork",
+                        parent=parent_id, fork_point=fp, promotable=False,
+                        index=self._new_index(), ltt_parent=None)
+        self.logs[child_id] = child
+        parent.hli_children.add(child_id)
+        # severed: its own LTT *tree* — no continuous inheritance (§5.3)
+        self.tails.add_root(child_id, tail0=fp, blocked0=0)
+        if self.fork_mode == "metacopy":
+            self._materialize_into(child.index, parent_id, fp)
+        return child_id
+
+    # -- squash ---------------------------------------------------------------
+    def _delete_or_freeze(self, removed: List[int]) -> None:
+        """Delete removed logs, but *freeze* (keep index of) any removed log
+        that an external log (e.g. an sFork in another tree) — or another kept
+        frozen log — still depends on through the HLI chain."""
+        removed_set = set(removed)
+        keep: Set[int] = set()
+        changed = True
+        while changed:   # fixpoint: freezing a child forces its ancestors frozen
+            changed = False
+            for d in removed:
+                if d in keep:
+                    continue
+                deps = self.logs[d].hli_children
+                if (deps - removed_set) or (deps & keep):
+                    keep.add(d)
+                    changed = True
+        for d in removed:
+            meta = self.logs[d]
+            if d in keep:
+                meta.kind = "frozen"   # index kept alive for dependents
+                meta.promotable_forks.clear()
+                meta.hli_children = (meta.hli_children - removed_set) | (meta.hli_children & keep)
+            else:
+                del self.logs[d]
+                if meta.parent is not None and meta.parent in self.logs:
+                    self.logs[meta.parent].hli_children.discard(d)
+        self._gc_frozen()
+
+    def _gc_frozen(self) -> None:
+        """Delete frozen logs whose last HLI dependent vanished (chain GC)."""
+        progressed = True
+        while progressed:
+            progressed = False
+            for lid in [k for k, v in self.logs.items()
+                        if v.kind == "frozen" and not v.hli_children]:
+                meta = self.logs.pop(lid)
+                if meta.parent is not None and meta.parent in self.logs:
+                    self.logs[meta.parent].hli_children.discard(lid)
+                progressed = True
+
+    def _apply_squash(self, log_id: int) -> List[int]:
+        meta = self._get(log_id)
+        if meta.kind == "root":
+            raise InvalidOperation("cannot squash the root log (§4.1)")
+        parent = self.logs.get(meta.ltt_parent) if meta.ltt_parent is not None else None
+        was_promotable = (parent is not None and log_id in parent.promotable_forks)
+        removed = self.tails.remove_subtree(log_id)
+        if was_promotable:
+            del parent.promotable_forks[log_id]
+            if not parent.promotable_forks:
+                self.tails.range_add(parent.log_id, d_blocked=-1)
+        self._delete_or_freeze(removed)
+        return removed
+
+    # -- promote ----------------------------------------------------------------
+    def _apply_promote(self, child_id: int, mode: Optional[str] = None) -> bool:
+        mode = mode or self.promote_mode
+        child = self._get(child_id)
+        if not child.promotable or child.kind != "cfork":
+            raise InvalidOperation("only promotable cForks can be promoted (§4.1)")
+        parent = self._get(child.ltt_parent)
+        if self._blocked_for_ops(parent):
+            # the parent is capped by an ancestor's promotable cFork; promoting
+            # into it would mutate content beyond that outer fork point, which
+            # the outer hold forbids until it resolves (DESIGN.md §4)
+            raise ForkBlocked(
+                "cannot promote into a log blocked by an ancestor's promotable cFork")
+        assert child_id in parent.promotable_forks
+        # 1. first promote wins: squash other promotable siblings (§4.1)
+        for sib in [c for c in parent.promotable_forks if c != child_id]:
+            self._apply_squash(sib)
+        # 2. tails: parent's lineage absorbs the child's local appends.
+        # Inheritance invariant: child_tail = parent_tail + child-lineage locals
+        # (the lineage may span frozen splice stand-ins, so count via tails).
+        lc = self.tails.get(child_id)[0] - self.tails.get(parent.log_id)[0]
+        self.tails.range_add(parent.log_id, d_tail=+lc)
+        self.tails.range_add(child_id, d_tail=-lc)
+        # 3. blocking. Two cases:
+        #    (a) child has its own promotable forks: they TRANSFER to the
+        #        parent (the grandchild's promise now applies to the promoted
+        #        lineage; child positions == new parent positions). The
+        #        counters are already correct: the child's hold-bit (+1 over
+        #        its subtree) and its exemption (-1 over its subtree) cancel,
+        #        and the parent's bit stays because it still holds forks.
+        #    (b) no transfer: reverse the child's exemption, then drop the
+        #        parent's hold bit.
+        del parent.promotable_forks[child_id]
+        assert not parent.promotable_forks
+        if child.promotable_forks:
+            parent.promotable_forks.update(child.promotable_forks)
+        else:
+            self.tails.range_add(child_id, d_blocked=+1)
+            self.tails.range_add(parent.log_id, d_blocked=-1)
+        # 4. index restructure
+        if mode == "splice":
+            self._promote_splice(parent, child)
+        else:
+            self._promote_copy(parent, child)
+        # 5. child's HLI dependents re-bind to the parent (same positions)
+        for dep in child.hli_children:
+            self.logs[dep].parent = parent.log_id
+            parent.hli_children.add(dep)
+        # 6. child's LTT children re-parent to parent; child's markers vanish
+        for d in self.tails.subtree_ids(child_id):
+            if d != child_id and self.logs[d].ltt_parent == child_id:
+                self.logs[d].ltt_parent = parent.log_id
+        self.tails.remove_node_keep_children(child_id)
+        if child.parent is not None and child.parent in self.logs:
+            self.logs[child.parent].hli_children.discard(child_id)
+        parent.hli_children.discard(child_id)
+        del self.logs[child_id]
+        self._gc_frozen()
+        return True
+
+    def _promote_splice(self, parent: LogMeta, child: LogMeta) -> None:
+        """O(1)-metadata: parent adopts child's index; the old parent index is
+        frozen as an internal HLI stand-in (beyond-paper; DESIGN.md §4.2).
+
+        Existing forks of the parent keep pointing at the (live) parent: every
+        other fork's fork point is <= fp, and the parent's new index only has
+        entries >= fp, so their sub-fp lookups fall through into the frozen
+        stand-in transparently (local counts below fp are zero in the adopted
+        index). Only the bottom of the promoted child's own frozen chain —
+        which references *old-parent positions >= fp* — re-binds to F.
+        """
+        frozen_id = self._next_id
+        self._next_id += 1
+        frozen = LogMeta(frozen_id, f"{parent.name}@pre-promote", "frozen",
+                         parent=parent.parent, index=parent.index,
+                         stands_for=parent.log_id)
+        self.logs[frozen_id] = frozen
+        if parent.parent is not None:
+            gp = self.logs[parent.parent]
+            gp.hli_children.discard(parent.log_id)
+            gp.hli_children.add(frozen_id)
+        self._rebind_snapshot_deps(parent, frozen)
+        # splice: parent continues the child's lineage
+        parent.index = child.index
+        if child.parent == parent.log_id:
+            parent.parent = frozen_id
+            frozen.hli_children.add(parent.log_id)
+        else:
+            # the child had its own frozen chain; its bottom link (a frozen
+            # stand-in whose parent was this log) was already re-bound to
+            # `frozen` by _rebind_snapshot_deps above
+            parent.parent = child.parent
+            self.logs[child.parent].hli_children.discard(child.log_id)
+            self.logs[child.parent].hli_children.add(parent.log_id)
+
+    def _rebind_snapshot_deps(self, parent: LogMeta, frozen: LogMeta) -> None:
+        """Severed forks and frozen chains hanging off `parent` hold positional
+        snapshots of the *old* parent content — a promote rewrites positions
+        beyond the fork point, so those dependents move to the frozen copy."""
+        for dep in [d for d in list(parent.hli_children)
+                    if self.logs[d].kind in ("sfork", "frozen")]:
+            self.logs[dep].parent = frozen.log_id
+            frozen.hli_children.add(dep)
+            parent.hli_children.discard(dep)
+
+    def _collect_lineage_runs(self, child: LogMeta, stop_id: int,
+                              lo: int, hi: int):
+        """All index runs contributing to child positions [lo, hi) that are NOT
+        derived from log `stop_id`'s own index (i.e. the child lineage's local
+        records, possibly spread over a frozen splice chain), re-keyed into
+        child positions. Returns [(child_start, object_id, offsets, lengths)]
+        sorted by child_start."""
+        out = []
+
+        def rec(meta: LogMeta, a: int, b: int, shift: int) -> None:
+            for seg in meta.index.segments(a, b):
+                if seg[0] == "local":
+                    _, s_lo, s_hi, run = seg
+                    i, j = s_lo - run.start, s_hi - run.start
+                    out.append((s_lo + shift, run.object_id,
+                                run.offsets[i:j], run.lengths[i:j]))
+                else:
+                    _, g_lo, g_hi, lcount = seg
+                    parent = self.logs[meta.parent]
+                    if parent.log_id == stop_id:
+                        continue  # stop-log-derived: handled by the merge
+                    rec(parent, g_lo - lcount, g_hi - lcount, shift + lcount)
+
+        rec(child, lo, hi, 0)
+        out.sort(key=lambda t: t[0])
+        return out
+
+    def _promote_copy(self, parent: LogMeta, child: LogMeta) -> None:
+        """Paper-faithful §5.6: copy the child's post-fp entries into the
+        parent's index; the parent's own post-fp entries are re-sequenced to
+        their positions in the child's (= the new) order. O(entries after fp)."""
+        fp = child.fork_point
+        if self._use_naive_index:
+            raise InvalidOperation("promote not supported for naive-index variants")
+        child_tail = self.tails.get(child.log_id)[0]
+        # collect the child lineage's local runs FIRST (the walk must still see
+        # the pre-rebind chain ending at this parent)
+        c_runs = self._collect_lineage_runs(child, parent.log_id, fp, child_tail)
+        # severed/frozen dependents keep the old positional content: freeze a
+        # zero-copy snapshot of the old index for them (copy mode rewrites
+        # positions beyond fp in place)
+        snapshot_deps = [d for d in parent.hli_children
+                         if self.logs[d].kind in ("sfork", "frozen")]
+        if snapshot_deps:
+            frozen_id = self._next_id
+            self._next_id += 1
+            frozen = LogMeta(frozen_id, f"{parent.name}@pre-promote", "frozen",
+                             parent=parent.parent, index=parent.index.snapshot(),
+                             stands_for=parent.log_id)
+            self.logs[frozen_id] = frozen
+            if parent.parent is not None:
+                self.logs[parent.parent].hli_children.add(frozen_id)
+            self._rebind_snapshot_deps(parent, frozen)
+        old_runs = parent.index.runs()
+        new_index = RunIndex()
+        for r in old_runs:
+            if r.end <= fp:
+                new_index.append_run(r.start, r.object_id, r.offsets, r.lengths)
+        p_runs = [r for r in old_runs if r.start >= fp]
+        ci = pi = 0
+        c_cum = 0  # child-lineage records emitted so far
+        while ci < len(c_runs) or pi < len(p_runs):
+            c_start = c_runs[ci][0] if ci < len(c_runs) else None
+            # a parent run at parent-position s lands at child-position s + c_cum
+            p_start = (p_runs[pi].start + c_cum) if pi < len(p_runs) else None
+            if p_start is None or (c_start is not None and c_start <= p_start):
+                start, obj, offs, lens = c_runs[ci]
+                new_index.append_run(start, obj, offs, lens)
+                c_cum += len(offs)
+                ci += 1
+            else:
+                r = p_runs[pi]
+                new_index.append_run(p_start, r.object_id, r.offsets, r.lengths)
+                pi += 1
+        parent.index = new_index
+
+    # ---------------------------------------------------------------- queries
+    def tail(self, log_id: int) -> int:
+        self._get(log_id)
+        return self.tails.get(log_id)[0]
+
+    def visible_tail(self, log_id: int) -> int:
+        """Tail capped at the earliest promotable fork point (readable range)."""
+        meta = self._get(log_id)
+        tail = self.tails.get(log_id)[0]
+        if self._holds(meta):
+            return min(tail, self._earliest_fp(meta))
+        return tail
+
+    def _lookup_one(self, log_id: int, pos: int) -> Span:
+        spans = self.read_spans(log_id, pos, pos + 1, _skip_checks=True)
+        assert len(spans) == 1
+        return spans[0]
+
+    def read_record_spans(self, log_id: int, lo: int, hi: int) -> List[Span]:
+        """One span per record (no coalescing) — for record-oriented reads."""
+        return self.read_spans(log_id, lo, hi, per_record=True)
+
+    def read_spans(self, log_id: int, lo: int, hi: int,
+                   _skip_checks: bool = False, per_record: bool = False) -> List[Span]:
+        """Resolve [lo, hi) to byte spans, recursing through the HLI chain.
+        Contiguous byte ranges are coalesced unless ``per_record``.
+
+        Raises ForkBlocked if the range crosses an active promotable fork point
+        that the reader is not entitled to see (§4.1).
+        """
+        meta = self._get(log_id)
+        tail = self.tails.get(log_id)[0]
+        if not (0 <= lo <= hi <= tail):
+            raise InvalidOperation(f"read [{lo},{hi}) out of range (tail {tail})")
+        if (not _skip_checks and hi > lo and self._holds(meta)
+                and hi > self._earliest_fp(meta)):
+            raise ForkBlocked(
+                f"reads on log {log_id} beyond position {self._earliest_fp(meta)} "
+                "are blocked while a promotable cFork exists")
+        out: List[Span] = []
+        # reads originating on a severed fork reference positionally-committed
+        # content (their view was fixed at fork time), so the beyond-fp block —
+        # which protects *provisional* positions a promote may rewrite — does
+        # not apply to them (the oracle materializes their content at creation)
+        origin_snapshot = meta.kind == "sfork"
+        self._resolve(meta, lo, hi, out, via_promotable=_skip_checks or origin_snapshot,
+                      per_record=per_record)
+        return out
+
+    def _resolve(self, meta: LogMeta, lo: int, hi: int, out: List[Span],
+                 via_promotable: bool, per_record: bool = False) -> None:
+        if lo >= hi:
+            return
+        if isinstance(meta.index, NaiveIndex):
+            for pos in range(lo, hi):
+                span = meta.index.get(pos)
+                if span is not None:
+                    out.append(span)
+                else:
+                    parent = self.logs.get(meta.parent, None)
+                    if parent is None:
+                        raise UnknownLog(f"position {pos} unresolvable in log {meta.log_id}")
+                    self._resolve(parent, pos, pos + 1, out, via_promotable=True)
+            return
+        for seg in meta.index.segments(lo, hi):
+            if seg[0] == "local":
+                _, a, b, run = seg
+                if per_record:
+                    out.extend(run.record_spans(a - run.start, b - run.start))
+                else:
+                    out.extend(run.span(a - run.start, b - run.start))
+            else:
+                _, a, b, lcount = seg
+                parent = self.logs.get(meta.parent, None)
+                if parent is None:
+                    raise UnknownLog(
+                        f"positions [{a},{b}) unresolvable in log {meta.log_id}")
+                # per-edge exemption: the promotable child itself (or a frozen
+                # stand-in for it) may see the parent beyond the fork point —
+                # it must, to validate. (`via_promotable` also carries the
+                # snapshot-origin exemption set in read_spans.)
+                edge_exempt = (via_promotable
+                               or meta.log_id in parent.promotable_forks
+                               or (meta.stands_for is not None
+                                   and meta.stands_for in parent.promotable_forks))
+                if (not edge_exempt and parent.alive and self._holds(parent)
+                        and (b - lcount) > self._earliest_fp(parent)):
+                    raise ForkBlocked(
+                        f"reads resolving into log {parent.log_id} beyond its "
+                        "promotable fork point are blocked")
+                self._resolve(parent, a - lcount, b - lcount, out,
+                              via_promotable=via_promotable,
+                              per_record=per_record)
+
+    # -------------------------------------------------------------- accounting
+    def metadata_bytes(self) -> int:
+        return sum(m.index.nbytes() for m in self.logs.values())
+
+    def live_log_ids(self) -> List[int]:
+        return sorted(k for k, v in self.logs.items() if v.alive)

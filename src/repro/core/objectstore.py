@@ -1,0 +1,168 @@
+"""S3-like object store backends (the diskless "shared storage" layer, §5.2).
+
+Bolt brokers are stateless: durability lives here. Two backends are provided:
+
+* :class:`MemoryObjectStore` — dict-backed, used by tests/benchmarks.
+* :class:`FileObjectStore`   — one file per object under a root dir; used by the
+  checkpoint substrate so training state and log data share one storage layer.
+
+Both support ranged GETs, which is what brokers use to fetch a single record
+out of a large multi-record object.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+from collections import OrderedDict
+from typing import Dict, Iterable, List, Optional, Tuple
+
+
+class ObjectStore:
+    """Abstract S3-ish KV-of-bytes interface."""
+
+    def put(self, key: str, data: bytes) -> None:
+        raise NotImplementedError
+
+    def get(self, key: str, offset: int = 0, length: Optional[int] = None) -> bytes:
+        raise NotImplementedError
+
+    def delete(self, key: str) -> None:
+        raise NotImplementedError
+
+    def exists(self, key: str) -> bool:
+        raise NotImplementedError
+
+    def list(self, prefix: str = "") -> List[str]:
+        raise NotImplementedError
+
+
+class MemoryObjectStore(ObjectStore):
+    def __init__(self) -> None:
+        self._objects: Dict[str, bytes] = {}
+        self._lock = threading.Lock()
+        self.put_count = 0
+        self.get_count = 0
+        self.bytes_written = 0
+        self.bytes_read = 0
+
+    def put(self, key: str, data: bytes) -> None:
+        with self._lock:
+            self._objects[key] = bytes(data)
+            self.put_count += 1
+            self.bytes_written += len(data)
+
+    def get(self, key: str, offset: int = 0, length: Optional[int] = None) -> bytes:
+        with self._lock:
+            obj = self._objects[key]
+            self.get_count += 1
+            end = len(obj) if length is None else offset + length
+            out = obj[offset:end]
+            self.bytes_read += len(out)
+            return out
+
+    def delete(self, key: str) -> None:
+        with self._lock:
+            self._objects.pop(key, None)
+
+    def exists(self, key: str) -> bool:
+        with self._lock:
+            return key in self._objects
+
+    def list(self, prefix: str = "") -> List[str]:
+        with self._lock:
+            return sorted(k for k in self._objects if k.startswith(prefix))
+
+    @property
+    def total_bytes(self) -> int:
+        with self._lock:
+            return sum(len(v) for v in self._objects.values())
+
+
+class FileObjectStore(ObjectStore):
+    """Filesystem-backed store; object keys map to files (slashes allowed).
+
+    Writes are atomic (write to tmp + rename) so a crash mid-PUT never leaves a
+    torn object — the property the checkpoint manifest protocol relies on.
+    """
+
+    def __init__(self, root: str) -> None:
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def _path(self, key: str) -> str:
+        path = os.path.join(self.root, key)
+        if os.path.commonpath([os.path.abspath(path), os.path.abspath(self.root)]) != os.path.abspath(self.root):
+            raise ValueError(f"key escapes store root: {key!r}")
+        return path
+
+    def put(self, key: str, data: bytes) -> None:
+        path = self._path(key)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+
+    def get(self, key: str, offset: int = 0, length: Optional[int] = None) -> bytes:
+        with open(self._path(key), "rb") as f:
+            f.seek(offset)
+            return f.read(length) if length is not None else f.read()
+
+    def delete(self, key: str) -> None:
+        try:
+            os.remove(self._path(key))
+        except FileNotFoundError:
+            pass
+
+    def exists(self, key: str) -> bool:
+        return os.path.exists(self._path(key))
+
+    def list(self, prefix: str = "") -> List[str]:
+        out = []
+        for dirpath, _dirnames, filenames in os.walk(self.root):
+            for fn in filenames:
+                if fn.endswith(".tmp"):
+                    continue
+                rel = os.path.relpath(os.path.join(dirpath, fn), self.root)
+                if rel.startswith(prefix):
+                    out.append(rel)
+        return sorted(out)
+
+
+class LRUObjectCache:
+    """Broker-side object cache (§5.7: "we equip brokers with a local object cache").
+
+    Caches whole objects; ranged reads slice the cached object. Forks of one
+    parent co-located on one broker share this cache (the paper's rationale for
+    co-location).
+    """
+
+    def __init__(self, store: ObjectStore, capacity_bytes: int = 64 << 20) -> None:
+        self.store = store
+        self.capacity = capacity_bytes
+        self._cache: "OrderedDict[str, bytes]" = OrderedDict()
+        self._size = 0
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: str, offset: int = 0, length: Optional[int] = None) -> bytes:
+        obj = self._cache.get(key)
+        if obj is None:
+            self.misses += 1
+            obj = self.store.get(key)
+            self._cache[key] = obj
+            self._size += len(obj)
+            while self._size > self.capacity and self._cache:
+                _, evicted = self._cache.popitem(last=False)
+                self._size -= len(evicted)
+        else:
+            self.hits += 1
+            self._cache.move_to_end(key)
+        end = len(obj) if length is None else offset + length
+        return obj[offset:end]
+
+    def get_spans(self, spans: Iterable[Tuple[str, int, int]]) -> List[bytes]:
+        return [self.get(k, off, ln) for (k, off, ln) in spans]

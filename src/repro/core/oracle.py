@@ -1,0 +1,220 @@
+"""Executable specification of AgileLog semantics (§4.1), by brute force.
+
+Every log's content is fully materialized; cForks eagerly copy and inherit.
+O(everything) — test-only. Property tests replay random operation traces
+against both this model and Bolt and require identical observable behavior
+(tails, reads, returned positions, and which operations error).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from .errors import ForkBlocked, InvalidOperation, UnknownLog
+
+
+@dataclass
+class _Hold:
+    """An active promotable cFork: parent, child, and per-log read/append caps."""
+    parent: int
+    child: int
+    fp: int
+    caps: Dict[int, int] = field(default_factory=dict)  # log -> cap position
+
+
+@dataclass
+class _OLog:
+    log_id: int
+    kind: str
+    parent: Optional[int]          # cfork inheritance edge (None for roots/sforks)
+    promotable: bool
+    records: List[bytes] = field(default_factory=list)
+    children: List[int] = field(default_factory=list)  # cfork children
+
+
+class OracleModel:
+    def __init__(self) -> None:
+        self.logs: Dict[int, _OLog] = {}
+        self.holds: List[_Hold] = []
+        self._next = 0
+
+    # -- helpers -------------------------------------------------------------------
+    def _get(self, lid: int) -> _OLog:
+        if lid not in self.logs:
+            raise UnknownLog(str(lid))
+        return self.logs[lid]
+
+    def _subtree(self, lid: int) -> List[int]:
+        out, stack = [], [lid]
+        while stack:
+            x = stack.pop()
+            out.append(x)
+            stack.extend(self.logs[x].children)
+        return out
+
+    def _holds_on(self, lid: int) -> List[_Hold]:
+        return [h for h in self.holds if h.parent == lid]
+
+    def _append_blocked(self, lid: int) -> bool:
+        """Blocked iff some hold caps this log and lid is not the hold's parent."""
+        return any(lid in h.caps and h.parent != lid for h in self.holds)
+
+    def _read_cap(self, lid: int) -> float:
+        cap: float = float("inf")
+        for h in self.holds:
+            if lid in h.caps:
+                cap = min(cap, h.caps[lid])
+        return cap
+
+    # -- ops ----------------------------------------------------------------------
+    def create_root(self, name: str = "") -> int:
+        lid = self._next
+        self._next += 1
+        self.logs[lid] = _OLog(lid, "root", None, False)
+        return lid
+
+    def append(self, lid: int, recs: List[bytes]) -> Optional[List[int]]:
+        log = self._get(lid)
+        if self._append_blocked(lid):
+            raise ForkBlocked("append blocked")
+        start = len(log.records)
+        # propagate to the whole cfork subtree (continuous inheritance)
+        for d in self._subtree(lid):
+            self.logs[d].records.extend(recs)
+        if self._holds_on(lid):
+            return None  # positions withheld (§4.1)
+        return list(range(start, start + len(recs)))
+
+    def _check_forkable(self, log: _OLog) -> None:
+        if self._append_blocked(log.log_id):
+            raise ForkBlocked("fork creation blocked")
+        own = self._holds_on(log.log_id)
+        if own and len(log.records) > min(h.fp for h in own):
+            raise ForkBlocked("cannot fork beyond an active promotable fork point")
+
+    def cfork(self, parent_id: int, promotable: bool) -> int:
+        parent = self._get(parent_id)
+        self._check_forkable(parent)
+        lid = self._next
+        self._next += 1
+        child = _OLog(lid, "cfork", parent_id, promotable,
+                      records=list(parent.records))
+        self.logs[lid] = child
+        parent.children.append(lid)
+        if promotable:
+            hold = _Hold(parent_id, lid, fp=len(parent.records))
+            # cap every log in parent's subtree except promotable branches
+            stack = [parent_id]
+            while stack:
+                x = stack.pop()
+                xl = self.logs[x]
+                hold.caps[x] = len(xl.records)
+                for c in xl.children:
+                    if x == parent_id and self.logs[c].promotable and \
+                            (c == lid or any(h.child == c for h in self.holds)):
+                        continue  # promotable children of the parent are exempt
+                    stack.append(c)
+            self.holds.append(hold)
+        else:
+            # new non-promotable child inherits existing caps of its parent
+            for h in self.holds:
+                if parent_id in h.caps:
+                    h.caps[lid] = len(child.records)
+        return lid
+
+    def sfork(self, parent_id: int, past: Optional[int]) -> int:
+        parent = self._get(parent_id)
+        self._check_forkable(parent)
+        n = len(parent.records)
+        if past is not None:
+            if not (0 <= past < n):
+                raise InvalidOperation("past offset out of range")
+            fp = past + 1
+        else:
+            fp = n
+        lid = self._next
+        self._next += 1
+        self.logs[lid] = _OLog(lid, "sfork", None, False,
+                               records=list(parent.records[:fp]))
+        return lid
+
+    def read(self, lid: int, lo: int, hi: int) -> List[bytes]:
+        log = self._get(lid)
+        if not (0 <= lo <= hi <= len(log.records)):
+            raise InvalidOperation("read out of range")
+        if hi > lo and hi > self._read_cap(lid):
+            raise ForkBlocked("read beyond promotable fork point")
+        return log.records[lo:hi]
+
+    def tail(self, lid: int) -> int:
+        return len(self._get(lid).records)
+
+    def visible_tail(self, lid: int) -> int:
+        """Tail capped by *own* holds (matches Bolt's convenience API; caps
+        induced by ancestors are surfaced as ForkBlocked on read instead)."""
+        n = len(self._get(lid).records)
+        own = [h.fp for h in self.holds if h.parent == lid]
+        return min([n] + own)
+
+    def squash(self, lid: int) -> List[int]:
+        log = self._get(lid)
+        if log.kind == "root":
+            raise InvalidOperation("cannot squash root")
+        removed = self._subtree(lid)
+        if log.kind == "cfork":
+            self.logs[log.parent].children.remove(lid)
+        removed_set = set(removed)
+        self.holds = [h for h in self.holds if h.child not in removed_set
+                      and h.parent not in removed_set]
+        for h in self.holds:
+            for d in removed_set:
+                h.caps.pop(d, None)
+        for d in removed:
+            del self.logs[d]
+        return removed
+
+    def promote(self, lid: int) -> bool:
+        child = self._get(lid)
+        if not child.promotable or child.kind != "cfork":
+            raise InvalidOperation("only promotable cForks can be promoted")
+        parent = self._get(child.parent)
+        if self._append_blocked(parent.log_id):
+            raise ForkBlocked(
+                "cannot promote into a log blocked by an ancestor's promotable cFork")
+        my_hold = next(h for h in self.holds if h.child == lid)
+        fp = my_hold.fp
+        # squash other promotable siblings
+        for h in [h for h in self.holds if h.parent == parent.log_id and h.child != lid]:
+            self.squash(h.child)
+        # splice the child's post-fp view into the parent and every surviving
+        # non-promotable descendant (at its own cap)
+        suffix = child.records[fp:]
+        for d in self._subtree(parent.log_id):
+            if d == lid or d in self._subtree(lid):
+                continue
+            cap = my_hold.caps.get(d)
+            if cap is None:
+                continue
+            dl = self.logs[d]
+            dl.records = dl.records[:cap] + suffix
+        # child's children re-parent; child vanishes
+        parent.children.remove(lid)
+        for c in child.children:
+            self.logs[c].parent = parent.log_id
+            parent.children.append(c)
+        self.holds.remove(my_hold)
+        # the child's own holds TRANSFER to the parent: the grandchild's
+        # promise now applies to the promoted lineage. Every log that was
+        # capped by my_hold becomes capped by the transferred hold at the
+        # translated position (its old cap + the transferred hold's offset
+        # past the old fork point).
+        for h in self.holds:
+            if h.parent != lid:
+                continue
+            h.parent = parent.log_id
+            for d, cap in my_hold.caps.items():
+                if d in self.logs and d not in h.caps:
+                    h.caps[d] = cap + (h.fp - my_hold.fp)
+        del self.logs[lid]
+        return True

@@ -1,0 +1,178 @@
+"""Fault-tolerant metadata layer: a minimal in-process replicated SMR group.
+
+The paper's metadata layer is "a fault-tolerant group that implements state-
+machine replication using Paxos or Raft" (§5.2). We implement the SMR contract
+the rest of Bolt depends on — a single totally-ordered command log applied
+deterministically on every replica, with majority commit, leader failover, and
+snapshot/compaction — without the wire protocol (single-process container).
+
+Properties exercised by tests:
+  * a committed command survives any minority of replica failures;
+  * killing the leader elects a new one and the state machines converge;
+  * snapshots truncate the command log and a replica restarted from a snapshot
+    replays the suffix and converges.
+"""
+
+from __future__ import annotations
+
+import pickle
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Tuple
+
+from .errors import NotLeader
+from .metadata import MetadataState
+
+
+@dataclass
+class _Entry:
+    term: int
+    cmd: Tuple
+
+
+class Replica:
+    def __init__(self, rid: int, make_state: Callable[[], MetadataState]) -> None:
+        self.rid = rid
+        self.make_state = make_state
+        self.state = make_state()
+        self.log: List[_Entry] = []
+        self.commit_index = -1      # highest applied entry index
+        self.snapshot_index = -1    # entries <= this are compacted into `snapshot`
+        self.snapshot: Optional[bytes] = None
+        self.alive = True
+
+    def append_entry(self, entry: _Entry) -> bool:
+        if not self.alive:
+            return False
+        self.log.append(entry)
+        return True
+
+    def apply_to(self, index: int) -> None:
+        """Apply committed entries up to `index` (0-based global index)."""
+        while self.commit_index < index:
+            self.commit_index += 1
+            local = self.commit_index - self.snapshot_index - 1
+            entry = self.log[local]
+            try:
+                self.state.apply(entry.cmd)
+            except Exception:
+                # Deterministic command failures (e.g. ForkBlocked) are part of
+                # the state machine contract: every replica fails identically
+                # and the state is unchanged; the leader surfaces the error.
+                pass
+
+    def take_snapshot(self) -> None:
+        self.snapshot = pickle.dumps(self.state)
+        drop = self.commit_index - self.snapshot_index
+        self.log = self.log[drop:]
+        self.snapshot_index = self.commit_index
+
+    def restore_from(self, other: "Replica") -> None:
+        """Crash-recovery: install peer snapshot + replay suffix."""
+        assert other.snapshot is not None
+        self.state = pickle.loads(other.snapshot)
+        self.snapshot = other.snapshot
+        self.snapshot_index = other.snapshot_index
+        self.commit_index = other.snapshot_index
+        self.log = list(other.log)
+        self.apply_to(other.commit_index)
+
+
+class MetadataService:
+    """Client-facing façade: propose() commands, query the leader's state."""
+
+    def __init__(self, n_replicas: int = 3, snapshot_every: int = 0,
+                 **state_kwargs) -> None:
+        make_state = lambda: MetadataState(**state_kwargs)  # noqa: E731
+        self.replicas = [Replica(i, make_state) for i in range(n_replicas)]
+        self.term = 1
+        self.leader_id = 0
+        self.snapshot_every = snapshot_every
+        self._since_snapshot = 0
+        self.proposals = 0
+
+    # -- leadership ------------------------------------------------------------
+    @property
+    def leader(self) -> Replica:
+        return self.replicas[self.leader_id]
+
+    def fail_replica(self, rid: int) -> None:
+        self.replicas[rid].alive = False
+        if rid == self.leader_id:
+            self._elect()
+
+    def recover_replica(self, rid: int) -> None:
+        r = self.replicas[rid]
+        r.alive = True
+        donor = max((p for p in self.replicas if p.alive and p.rid != rid),
+                    key=lambda p: p.commit_index)
+        if donor.commit_index > r.commit_index:
+            if donor.snapshot is None:
+                donor.take_snapshot()
+            r.restore_from(donor)
+
+    def _elect(self) -> None:
+        alive = [r for r in self.replicas if r.alive]
+        if len(alive) * 2 <= len(self.replicas):
+            raise RuntimeError("no quorum: metadata layer unavailable")
+        # most-up-to-date alive replica wins (Raft's log-completeness rule)
+        winner = max(alive, key=lambda r: (len(r.log) + r.snapshot_index, -r.rid))
+        self.leader_id = winner.rid
+        self.term += 1
+        # discard uncommitted suffix (never acked to clients)
+        for r in alive:
+            keep = winner.commit_index - r.snapshot_index
+            r.log = r.log[:max(0, keep)]
+
+    # -- the SMR write path ------------------------------------------------------
+    def propose(self, cmd: Tuple, replica_hint: Optional[int] = None) -> object:
+        """Sequence `cmd`, commit at majority, apply everywhere, return the
+        leader's apply result (or raise its deterministic error)."""
+        if replica_hint is not None and replica_hint != self.leader_id:
+            raise NotLeader(f"replica {replica_hint} is not the leader")
+        entry = _Entry(self.term, cmd)
+        acks = 0
+        for r in self.replicas:
+            if r.alive and r.append_entry(entry):
+                acks += 1
+        if acks * 2 <= len(self.replicas):
+            raise RuntimeError("no quorum: append not committed")
+        # global index of the just-appended entry: entries [0..snapshot_index]
+        # are compacted, so global = snapshot_index + local_length
+        index = self.leader.snapshot_index + len(self.leader.log)
+        result: object = None
+        error: Optional[Exception] = None
+        for r in self.replicas:
+            if not r.alive:
+                continue
+            if r is self.leader:
+                # capture leader's apply result/error explicitly
+                while r.commit_index < index - 1:
+                    r.apply_to(index - 1)
+                r.commit_index = index
+                try:
+                    result = r.state.apply(entry.cmd)
+                except Exception as e:  # deterministic command error
+                    error = e
+            else:
+                r.apply_to(index)
+        self.proposals += 1
+        self._since_snapshot += 1
+        if self.snapshot_every and self._since_snapshot >= self.snapshot_every:
+            for r in self.replicas:
+                if r.alive:
+                    r.take_snapshot()
+            self._since_snapshot = 0
+        if error is not None:
+            raise error
+        return result
+
+    # -- linearizable reads (leader-local) -------------------------------------
+    @property
+    def state(self) -> MetadataState:
+        return self.leader.state
+
+    def check_convergence(self) -> bool:
+        """All alive replicas have identical applied state (test hook)."""
+        blobs = {pickle.dumps(sorted(r.state.live_log_ids()))
+                 for r in self.replicas if r.alive and r.commit_index == self.leader.commit_index}
+        return len(blobs) <= 1

@@ -1,0 +1,7 @@
+"""Distribution layer: mesh context, activation sharding helpers, parameter
+sharding rules with divisibility-aware fallbacks."""
+
+from .context import axis_size, get_mesh, shard, use_mesh
+from .sharding import param_shardings
+
+__all__ = ["use_mesh", "get_mesh", "shard", "axis_size", "param_shardings"]

@@ -1,0 +1,117 @@
+"""Parameter sharding rules (TP over 'model'; ZeRO over 'data'×'pod').
+
+Rules are name-based with divisibility-aware fallback: a dim is sharded over
+an axis only when evenly divisible, otherwise that dim stays replicated (small
+archs like smollm/whisper simply replicate attention heads — their parameter
+bytes are negligible; big archs are constructed so the TP-critical dims divide,
+via head/expert padding knobs in the config).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# leaf-name -> per-dim axis *preference* for the trailing dims (leading stack
+# dims from scan are always unsharded). None = replicate that dim.
+_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    # embeddings / head
+    "embed":   ("model", None),          # (V, D)
+    "pos_embed": (None, None),
+    "head":    (None, "model"),          # (D, V)
+    "vision_proj": (None, None),
+    # attention
+    "wq":      (None, "model", None),    # (D, H, Dh)
+    "wk":      (None, "model", None),    # (D, KH, Dh)
+    "wv":      (None, "model", None),
+    "wo":      ("model", None, None),    # (H, Dh, D)
+    "w_dkv":   (None, None),             # (D, r+rope)  [MLA, small]
+    "w_uk":    (None, "model", None),    # (r, H, Dh)
+    "w_uv":    (None, "model", None),
+    "q_norm":  (None,),
+    "k_norm":  (None,),
+    "kv_norm": (None,),
+    # dense MLP
+    "w_in":    (None, "model"),          # (D, F)
+    "w_gate":  (None, "model"),
+    "w_out":   ("model", None),          # (F, D)
+    # MoE (leading E dim)
+    "router":  (None, None),             # (D, E) small
+    "e_in":    ("model", None, None),    # (E, D, Fe)
+    "e_gate":  ("model", None, None),
+    "e_out":   ("model", None, None),    # (E, Fe, D)
+    # mamba
+    "m_in":    (None, None, "model"),    # (D, 2, Di)
+    "m_conv":  (None, "model"),          # (W, Di)
+    "m_xproj": ("model", None),          # (Di, dtr+2N)
+    "m_dt":    (None, "model"),          # (dtr, Di)
+    "m_dtb":   ("model",),               # (Di,)
+    "m_alog":  ("model", None),          # (Di, N)
+    "m_d":     ("model",),               # (Di,)
+    "m_out":   ("model", None),          # (Di, D)
+    # xLSTM
+    "x_up":    (None, None, "model"),    # (D, 2, Di)
+    "x_q":     ("model", None, None),    # block-diag (nb, bs, bs): channel-local
+    "x_k":     ("model", None, None),
+    "x_v":     ("model", None, None),
+    "x_if":    ("model", None),          # (Di, 2H) row -> psum
+    "x_out":   ("model", None),          # (Di, D)
+    "s_gates": (None, None, None),       # sLSTM small: replicate
+    "s_rec":   (None, None, None, None),
+    "s_out":   (None, None),
+}
+
+
+def _spec_for(name: str, shape: Tuple[int, ...],
+              mesh: jax.sharding.Mesh) -> P:
+    rule = _RULES.get(name)
+    if rule is None:
+        return P()  # norms, biases, anything unmatched: replicate
+    ndim = len(shape)
+    n_lead = ndim - len(rule)
+    axes: list = [None] * ndim
+    for i, pref in enumerate(rule):
+        dim = n_lead + i
+        if pref is not None and pref in mesh.axis_names \
+                and shape[dim] % mesh.shape[pref] == 0:
+            axes[dim] = pref
+    return P(*axes)
+
+
+def zero_extend(spec: P, shape: Tuple[int, ...], mesh: jax.sharding.Mesh,
+                axes: Tuple[str, ...] = ("data", "pod")) -> P:
+    """ZeRO-1: extend a param spec with data/pod sharding on the largest
+    still-unsharded divisible dim (for optimizer state / master weights)."""
+    parts = list(spec) + [None] * (len(shape) - len(spec))
+    for ax in axes:
+        if ax not in mesh.axis_names or mesh.shape[ax] == 1:
+            continue
+        cand = [(shape[i], i) for i in range(len(shape))
+                if parts[i] is None and shape[i] % mesh.shape[ax] == 0]
+        if not cand:
+            continue
+        _, best = max(cand)
+        parts[best] = ax
+    return P(*parts)
+
+
+def param_shardings(param_shapes: Any, mesh: jax.sharding.Mesh,
+                    zero: bool = False) -> Any:
+    """Map a pytree of ShapeDtypeStructs to NamedShardings by leaf path."""
+
+    def one(path, leaf) -> NamedSharding:
+        name = None
+        for entry in reversed(path):
+            key = getattr(entry, "key", getattr(entry, "name", None))
+            if isinstance(key, str):
+                name = key
+                break
+        spec = _spec_for(name or "", leaf.shape, mesh)
+        if zero:
+            spec = zero_extend(spec, leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, param_shapes)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the compute hot-spots (validated in interpret mode).
+
+Each kernel ships as <name>.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jit'd dispatch wrappers selected by cfg.use_pallas), and ref.py
+(pure-jnp oracles that tests compare against).
+"""
+
+from .ops import flash_attention_pallas, mlstm_chunk_pallas
+
+__all__ = ["flash_attention_pallas", "mlstm_chunk_pallas"]

@@ -1,0 +1,107 @@
+"""Chunkwise mLSTM as a Pallas TPU kernel.
+
+Grid: (B*H, n_chunks); the chunk dimension is sequential and carries the
+matrix-memory state (C, n, m) in VMEM scratch. Each chunk does three
+MXU matmuls (intra-chunk scores, value combine, state outer-product) plus
+cheap vector work on the cumulative gates — the TPU-friendly factorization of
+xLSTM's recurrence (the per-step recurrent form is pure VPU and ~Dh x slower).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 64
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, li_ref, lf_ref, h_ref,
+                  C_ref, n_ref, m_ref, *, chunk: int):
+    cj = pl.program_id(1)
+
+    @pl.when(cj == 0)
+    def _init():
+        C_ref[...] = jnp.zeros_like(C_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+
+    q = q_ref[0].astype(jnp.float32)          # (L, Dh)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    li = li_ref[0].astype(jnp.float32)        # (L,)
+    lf = lf_ref[0].astype(jnp.float32)
+
+    m0 = m_ref[0]
+    F = jnp.cumsum(lf)                        # (L,) inclusive
+    g = li - F
+    run = jnp.maximum(m0, jax.lax.cummax(g, axis=0))
+    m = F + run                               # stabilizer per step
+    logw = (F - m)[:, None] + g[None, :]      # (L, L): t rows, s cols
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    W = jnp.where(t_idx >= s_idx, jnp.exp(logw), 0.0)
+    scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32) * W
+    h_num = jax.lax.dot_general(scores, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    n_intra = jax.lax.dot_general(W, k, (((1,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    w_state = jnp.exp(F + m0 - m)             # (L,)
+    h_num = h_num + w_state[:, None] * jax.lax.dot_general(
+        q, C_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    n_t = n_intra + w_state[:, None] * n_ref[...][None, :]
+    den = jnp.abs(jnp.sum(q * n_t, axis=1))
+    h_ref[0] = (h_num / jnp.maximum(den, jnp.exp(-m))[:, None]).astype(h_ref.dtype)
+
+    m_L = m[-1]
+    wk = jnp.exp((F[-1] - F) + li - m_L)      # (L,)
+    C_ref[...] = (jnp.exp(F[-1] + m0 - m_L) * C_ref[...]
+                  + jax.lax.dot_general(k * wk[:, None], v,
+                                        (((0,), (0,)), ((), ())),
+                                        preferred_element_type=jnp.float32))
+    n_ref[...] = (jnp.exp(F[-1] + m0 - m_L) * n_ref[...]
+                  + jnp.sum(k * wk[:, None], axis=0))
+    m_ref[0] = m_L
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mlstm_chunk(q: jax.Array, k: jax.Array, v: jax.Array,
+                li: jax.Array, lf: jax.Array, *,
+                chunk: int = DEFAULT_CHUNK,
+                interpret: bool = False) -> jax.Array:
+    """q,k,v: (B,H,S,Dh) (k pre-scaled); li,lf: (B,H,S). Returns h (B,H,S,Dh)."""
+    B, H, S, Dh = q.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    qf = q.reshape(B * H, S, Dh)
+    kf = k.reshape(B * H, S, Dh)
+    vf = v.reshape(B * H, S, Dh)
+    lif = li.reshape(B * H, S)
+    lff = lf.reshape(B * H, S)
+
+    out = pl.pallas_call(
+        functools.partial(_mlstm_kernel, chunk=chunk),
+        grid=(B * H, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, Dh), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, chunk, Dh), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, chunk, Dh), lambda b, j: (b, j, 0)),
+            pl.BlockSpec((1, chunk), lambda b, j: (b, j)),
+            pl.BlockSpec((1, chunk), lambda b, j: (b, j)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, Dh), lambda b, j: (b, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Dh, Dh), jnp.float32),   # C state
+            pltpu.VMEM((Dh,), jnp.float32),      # n state
+            pltpu.VMEM((1,), jnp.float32),       # m stabilizer
+        ],
+        interpret=interpret,
+    )(qf, kf, vf, lif, lff)
+    return out.reshape(B, H, S, Dh)

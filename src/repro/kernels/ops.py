@@ -1,0 +1,26 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the kernels validate on CPU;
+on a real TPU deployment (cfg.use_pallas) they lower natively.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from .flash_attention import flash_attention as _flash
+from .mlstm_chunk import mlstm_chunk as _mlstm
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           block_q: int = 128, block_k: int = 128):
+    return _flash(q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+                  interpret=not _on_tpu())
+
+
+def mlstm_chunk_pallas(q, k, v, li, lf, *, chunk: int = 64):
+    return _mlstm(q, k, v, li, lf, chunk=chunk, interpret=not _on_tpu())

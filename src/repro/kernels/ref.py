@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the Pallas kernels (tests assert_allclose vs these)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True) -> jax.Array:
+    """Naive softmax attention. q: (B,H,S,Dh); k,v: (B,KH,S,Dh)."""
+    B, H, S, Dh = q.shape
+    KH = k.shape[1]
+    G = H // KH
+    qg = q.reshape(B, KH, G, S, Dh).astype(jnp.float32)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, k.astype(jnp.float32)) * Dh ** -0.5
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, S, Dh).astype(q.dtype)
+
+
+def mlstm_ref(q, k, v, li, lf):
+    """Step-by-step stabilized mLSTM recurrence (fp32).
+    q,k,v: (B,H,S,Dh); li,lf: (B,H,S) (i~ raw, logsig(f~)). Returns (h, (C,n,m))."""
+    B, H, S, Dh = q.shape
+    C = jnp.zeros((B, H, Dh, Dh), jnp.float32)
+    n = jnp.zeros((B, H, Dh), jnp.float32)
+    m = jnp.full((B, H), -1e30, jnp.float32)
+    hs = []
+    for t in range(S):
+        m_new = jnp.maximum(lf[:, :, t] + m, li[:, :, t])
+        f_ = jnp.exp(lf[:, :, t] + m - m_new)
+        i_ = jnp.exp(li[:, :, t] - m_new)
+        C = (f_[..., None, None] * C
+             + i_[..., None, None] * k[:, :, t, :, None] * v[:, :, t, None, :])
+        n = f_[..., None] * n + i_[..., None] * k[:, :, t]
+        m = m_new
+        num = jnp.einsum("bhde,bhd->bhe", C, q[:, :, t])
+        den = jnp.abs(jnp.einsum("bhd,bhd->bh", n, q[:, :, t]))
+        hs.append(num / jnp.maximum(den, jnp.exp(-m))[..., None])
+    return jnp.stack(hs, axis=2), (C, n, m)

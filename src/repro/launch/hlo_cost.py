@@ -1,0 +1,401 @@
+"""Trip-count-aware cost analysis of compiled (post-SPMD) HLO text.
+
+XLA's built-in ``compiled.cost_analysis()`` counts a ``while`` body ONCE —
+useless for scanned layer stacks (the whole point of scan-over-groups). This
+analyzer parses the HLO module, memoizes per-computation costs, and multiplies
+``while`` bodies by their trip counts (read from the loop-condition's compare
+bound), giving:
+
+  * flops            — dot-general flops (2*M*N*K, batched), trip-aware;
+  * bytes            — HBM-traffic proxy: operand+result bytes of top-level
+                       (post-fusion) instructions; dynamic-update-slice counts
+                       the update slice only (in-place);
+  * collective bytes — per-device link bytes per collective kind with ring
+                       coefficients (all-reduce 2x, others 1x), trip-aware.
+
+Elementwise flops are ignored (dot-dominated workloads; noted in
+EXPERIMENTS.md). Validated against hand-computed cases in tests/test_hlo_cost.py.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_HEAD_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\(.*?\)|[\w\[\],]+(?:\{[\d,]*\})?))\s+"
+    r"([\w\-]+)\(")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s->\s.+\{\s*$")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_COND_BODY_RE = re.compile(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CONST_RE = re.compile(r"=\s*s32\[\]\s+constant\((\d+)\)")
+
+_COLL_COEF = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+              "all-to-all": 1.0, "collective-permute": 1.0,
+              "ragged-all-to-all": 1.0}
+
+
+def _parse_dims(type_str: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(type_str):
+        dims = [int(d) for d in m.group(2).split(",") if d]
+        out.append((m.group(1), dims))
+    return out
+
+
+_F32_AS_BF16 = False  # module switch set by HloCostModel (TPU dtype correction)
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _parse_dims(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims:
+            n *= d
+        nbytes = _DTYPE_BYTES[dt]
+        if _F32_AS_BF16 and dt == "f32":
+            nbytes = 2
+        total += n * nbytes
+    return total
+
+
+def _split_operands(args: str) -> List[str]:
+    out, depth, cur = [], 0, []
+    for ch in args:
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            depth += ch in "({["
+            depth -= ch in ")}]"
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur).strip())
+    return [o for o in out if o]
+
+
+@dataclass
+class _Instr:
+    name: str
+    type_str: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+
+
+@dataclass
+class _Computation:
+    name: str
+    instrs: List[_Instr] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, List[float]] = field(default_factory=dict)  # kind -> [count, link_bytes]
+
+    def add(self, other: "Cost", times: float = 1.0) -> None:
+        self.flops += other.flops * times
+        self.bytes += other.bytes * times
+        for k, (c, b) in other.coll.items():
+            e = self.coll.setdefault(k, [0.0, 0.0])
+            e[0] += c * times
+            e[1] += b * times
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(b for _c, b in self.coll.values())
+
+
+class HloCostModel:
+    """`tpu_dtype_correction` models the TPU-target dtypes: the CPU backend
+    legalizes bf16 compute to f32 (phantom converts/buffers that do not exist
+    on TPU), and donated buffers get entry copies that TPU aliases. With the
+    flag: f32 buffers count at bf16 width and copies are free. Genuinely-f32
+    state (optimizer moments, flash accumulators) is then undercounted 2x —
+    a small share, noted in EXPERIMENTS.md."""
+
+    def __init__(self, hlo_text: str, tpu_dtype_correction: bool = False) -> None:
+        self.computations: Dict[str, _Computation] = {}
+        self.entry: Optional[str] = None
+        self.tpu_corr = tpu_dtype_correction
+        self._parse(hlo_text)
+        self._memo: Dict[str, Cost] = {}
+
+    # ------------------------------------------------------------------ parse
+    def _parse(self, text: str) -> None:
+        cur: Optional[_Computation] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if cur is None:
+                m = _COMP_RE.match(line)
+                if m:
+                    cur = _Computation(m.group(1))
+                    if line.lstrip().startswith("ENTRY"):
+                        self.entry = m.group(1)
+                continue
+            if line.strip() == "}":
+                self.computations[cur.name] = cur
+                cur = None
+                continue
+            m = _INSTR_HEAD_RE.match(line)
+            if m:
+                name, tstr, opcode = m.groups()
+                # balance-scan the operand list (attrs may contain parens
+                # inside quoted metadata)
+                start = m.end()
+                depth, i = 1, start
+                while i < len(line) and depth:
+                    depth += line[i] == "("
+                    depth -= line[i] == ")"
+                    i += 1
+                args = line[start:i - 1]
+                attrs = line[i:]
+                ins = _Instr(name, tstr, opcode, _split_operands(args), attrs)
+                cur.instrs.append(ins)
+                cur.shapes[name] = tstr
+
+    # ------------------------------------------------------------------ cost
+    def _operand_shape(self, comp: _Computation, operand: str) -> str:
+        name = operand.lstrip("%")
+        return comp.shapes.get(name, "")
+
+    def _trip_count(self, cond_name: str) -> int:
+        seen, stack, best = set(), [cond_name], 1
+        while stack:
+            cn = stack.pop()
+            if cn in seen or cn not in self.computations:
+                continue
+            seen.add(cn)
+            comp = self.computations[cn]
+            for ins in comp.instrs:
+                if ins.opcode == "constant":
+                    mm = _CONST_RE.search(f"= {ins.type_str} constant({ins.operands[0] if ins.operands else ''})")
+                    # simpler: match on the raw type/operand
+                    if ins.type_str == "s32[]" and ins.operands:
+                        try:
+                            best = max(best, int(ins.operands[0]))
+                        except ValueError:
+                            pass
+                cm = _CALLS_RE.search(ins.attrs)
+                if cm:
+                    stack.append(cm.group(1))
+        return best
+
+    def comp_cost(self, name: str, count_bytes: bool = True) -> Cost:
+        """count_bytes=False inside fused computations: a fusion's traffic is
+        its boundary I/O; internal ops only contribute flops/collectives."""
+        key = (name, count_bytes)
+        if key in self._memo:
+            return self._memo[key]
+        self._memo[key] = Cost()  # cycle guard
+        comp = self.computations.get(name)
+        if comp is None:
+            return self._memo[key]
+        total = Cost()
+        for ins in comp.instrs:
+            total.add(self._instr_cost(comp, ins, count_bytes))
+        self._memo[key] = total
+        return total
+
+    def _instr_cost(self, comp: _Computation, ins: _Instr,
+                    count_bytes: bool = True) -> Cost:
+        c = Cost()
+        op = ins.opcode
+        if op in ("parameter", "constant", "get-tuple-element", "tuple",
+                  "bitcast", "after-all", "partition-id", "replica-id"):
+            return c
+        if op == "copy":
+            # loop-carried copies are CPU-HLO artifacts (TPU aliases them);
+            # only entry-level staging copies count, and none at all under
+            # TPU dtype correction (donation aliases them)
+            if count_bytes and comp.name == self.entry and not self.tpu_corr:
+                c.bytes += self._io_bytes(comp, ins)
+            return c
+        if op == "while":
+            m = _COND_BODY_RE.search(ins.attrs)
+            if m:
+                trips = self._trip_count(m.group(1))
+                c.add(self.comp_cost(m.group(2), count_bytes), times=trips)
+                c.add(self.comp_cost(m.group(1), count_bytes), times=trips)
+            return c
+        if op in ("call", "fusion", "async-start"):
+            m = _CALLS_RE.search(ins.attrs)
+            sub = Cost()
+            if m:
+                # internals: flops + collectives only
+                sub = self.comp_cost(m.group(1), count_bytes=False)
+            c.add(sub)
+            if count_bytes:
+                # traffic: fusion boundary = result + effective operand reads.
+                # An operand consumed only through dynamic-slice/gather reads a
+                # slice; a dynamic-update-slice root writes (and aliases) only
+                # the update window, not the whole carried buffer.
+                result_bytes = float(_type_bytes(ins.type_str))
+                eff = {}
+                if m:
+                    eff, dus_bytes = self._fusion_effective_io(
+                        m.group(1), ins.type_str)
+                    if dus_bytes is not None:
+                        result_bytes = float(dus_bytes)
+                c.bytes += result_bytes
+                for i, o in enumerate(ins.operands):
+                    full = (_type_bytes(self._operand_shape(comp, o))
+                            if (o.startswith("%") or re.match(r"^[\w.\-]+$", o))
+                            else _type_bytes(o))
+                    c.bytes += float(min(full, eff.get(i, full))
+                                     if i in eff else full)
+            return c
+        if op == "conditional":
+            for m in re.finditer(r"%?([\w.\-]+)", ins.attrs):
+                if m.group(1) in self.computations:
+                    c.add(self.comp_cost(m.group(1), count_bytes))
+            if count_bytes:
+                c.bytes += self._io_bytes(comp, ins)
+            return c
+        if op == "dot":
+            out_elems = 1
+            for _dt, dims in _parse_dims(ins.type_str):
+                for d in dims:
+                    out_elems *= d
+            k = 1
+            mdim = _DIMS_RE.search(ins.attrs)
+            lhs_shape = _parse_dims(self._operand_shape(comp, ins.operands[0]))
+            if mdim and lhs_shape:
+                dims = lhs_shape[0][1]
+                for i in [int(x) for x in mdim.group(1).split(",") if x]:
+                    if i < len(dims):
+                        k *= dims[i]
+            c.flops += 2.0 * out_elems * k
+            if count_bytes:
+                c.bytes += self._io_bytes(comp, ins)
+            return c
+        base = op.replace("-start", "")
+        if base in _COLL_COEF:
+            b = _type_bytes(ins.type_str) * _COLL_COEF[base]
+            e = c.coll.setdefault(base, [0.0, 0.0])
+            e[0] += 1
+            e[1] += b
+            if count_bytes:
+                c.bytes += self._io_bytes(comp, ins)
+            return c
+        if op == "dynamic-update-slice":
+            if count_bytes and len(ins.operands) > 1:
+                upd = self._operand_shape(comp, ins.operands[1])
+                c.bytes += 2.0 * _type_bytes(upd)
+            return c
+        if op in ("dynamic-slice", "gather", "slice"):
+            # reads only the sliced window, not the source buffer (scan over
+            # stacked params would otherwise count the whole stack per trip)
+            if count_bytes:
+                c.bytes += 2.0 * _type_bytes(ins.type_str)
+            return c
+        if op == "scatter":
+            if count_bytes:
+                c.bytes += 3.0 * _type_bytes(ins.type_str)
+            return c
+        if op in ("all-reduce-done", "all-gather-done", "async-done",
+                  "collective-permute-done", "copy-done"):
+            return c
+        # generic instruction: operands + result traffic
+        if count_bytes:
+            c.bytes += self._io_bytes(comp, ins)
+        return c
+
+    def _fusion_effective_io(self, comp_name: str, result_type: str):
+        """(per-parameter effective read bytes, root-DUS write bytes or None).
+
+        Traces through view/convert chains (the CPU backend legalizes bf16 by
+        wrapping ops in converts; on TPU those don't exist):
+          * a parameter consumed only through slicing ops reads slice bytes;
+          * a parameter that is the in-place target of a result-shaped
+            dynamic-update-slice is aliased (reads ~nothing);
+          * if the fusion produces a result-shaped DUS, write traffic is the
+            update window, not the whole carried buffer.
+        """
+        comp = self.computations.get(comp_name)
+        if comp is None:
+            return {}, None
+        users: Dict[str, List[_Instr]] = {}
+        for ins in comp.instrs:
+            for o in ins.operands:
+                users.setdefault(o.lstrip("%"), []).append(ins)
+        res_dims = [d for _t, d in _parse_dims(result_type)][:1]
+        dus_bytes = None
+        for ins in comp.instrs:
+            if ins.opcode == "dynamic-update-slice":
+                d = [x for _t, x in _parse_dims(ins.type_str)][:1]
+                if d == res_dims and len(ins.operands) > 1:
+                    upd = comp.shapes.get(ins.operands[1].lstrip("%"), "")
+                    dus_bytes = (dus_bytes or 0) + _type_bytes(upd)
+
+        _VIEW = ("convert", "bitcast", "copy", "reshape", "transpose",
+                 "broadcast")
+        _SLICE = ("dynamic-slice", "slice", "gather")
+
+        def effective(pname: str):
+            total, stack, seen = 0, [pname], set()
+            while stack:
+                nm = stack.pop()
+                if nm in seen:
+                    continue
+                seen.add(nm)
+                for u in users.get(nm, []):
+                    if u.opcode in _VIEW:
+                        stack.append(u.name)
+                    elif u.opcode in _SLICE:
+                        total += _type_bytes(u.type_str)
+                    elif (u.opcode == "dynamic-update-slice"
+                          and u.operands
+                          and u.operands[0].lstrip("%") == nm):
+                        pass  # aliased in-place carry target
+                    else:
+                        return None  # consumed at full size somewhere
+            return total
+
+        out: Dict[int, int] = {}
+        for ins in comp.instrs:
+            if ins.opcode != "parameter":
+                continue
+            try:
+                idx = int(ins.operands[0])
+            except (ValueError, IndexError):
+                continue
+            r = effective(ins.name)
+            if r is not None:
+                out[idx] = r
+        return out, dus_bytes
+
+    def _io_bytes(self, comp: _Computation, ins: _Instr) -> float:
+        b = float(_type_bytes(ins.type_str))
+        for o in ins.operands:
+            if o.startswith("%") or re.match(r"^[\w.\-]+$", o):
+                b += _type_bytes(self._operand_shape(comp, o))
+            else:
+                b += _type_bytes(o)
+        return b
+
+    def total(self) -> Cost:
+        assert self.entry is not None, "no ENTRY computation found"
+        global _F32_AS_BF16
+        prev = _F32_AS_BF16
+        _F32_AS_BF16 = self.tpu_corr
+        try:
+            return self.comp_cost(self.entry)
+        finally:
+            _F32_AS_BF16 = prev
+
+
+def analyze(hlo_text: str, tpu_dtype_correction: bool = False) -> Cost:
+    return HloCostModel(hlo_text, tpu_dtype_correction).total()

@@ -1,0 +1,135 @@
+"""Input specs (ShapeDtypeStruct stand-ins) and sharding assignments per
+(architecture × shape) dry-run cell. No device allocation happens here.
+
+Shapes (assignment):
+    train_4k     seq=4096,   global_batch=256   -> train_step
+    prefill_32k  seq=32768,  global_batch=32    -> prefill (forward + caches)
+    decode_32k   seq=32768,  global_batch=128   -> serve_step (1 new token)
+    long_500k    seq=524288, global_batch=1     -> serve_step; sub-quadratic
+                 archs only (jamba: 9 attention layers w/ seq-sharded cache +
+                 O(1) mamba states; xlstm: O(1) states). Skipped for the 8
+                 pure-full-attention archs (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from ..models.config import ModelConfig
+from ..models.lm import init_caches, init_params
+
+SHAPES: Dict[str, Tuple[int, int, str]] = {
+    "train_4k": (4096, 256, "train"),
+    "prefill_32k": (32768, 32, "prefill"),
+    "decode_32k": (32768, 128, "decode"),
+    "long_500k": (524288, 1, "decode"),
+}
+
+SUBQUADRATIC = {"jamba-1.5-large-398b", "xlstm-1.3b"}
+
+
+def cell_supported(arch: str, shape: str) -> Tuple[bool, str]:
+    if shape == "long_500k" and arch not in SUBQUADRATIC:
+        return False, "long_500k needs sub-quadratic attention (full-attention arch)"
+    return True, ""
+
+
+# -------------------------------------------------------------------- helpers
+def _sds(shape, dtype, mesh, spec) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _batch_axes(mesh, batch: int):
+    """Largest prefix of ('pod','data') that divides `batch`."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    total = 1
+    used = []
+    for a in axes:
+        if batch % (total * mesh.shape[a]) == 0:
+            used.append(a)
+            total *= mesh.shape[a]
+    return tuple(used) if used else None
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: init_params(cfg, k), jax.random.key(0))
+
+
+def abstract_caches(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: init_caches(cfg, batch, max_len))
+
+
+def batch_specs(cfg: ModelConfig, mesh, seq: int, batch: int,
+                with_labels: bool, decode: bool = False) -> Dict[str, jax.ShapeDtypeStruct]:
+    ba = _batch_axes(mesh, batch)
+    out: Dict[str, Any] = {}
+    s_text = seq
+    if decode:
+        # one new token; modality prefixes already live in the cache
+        out["tokens"] = _sds((batch, seq), jnp.int32, mesh, P(ba, None))
+        return out
+    if cfg.vlm is not None:
+        s_text = seq - cfg.vlm.n_patches
+        out["vision_embeds"] = _sds((batch, cfg.vlm.n_patches, cfg.d_model),
+                                    jnp.bfloat16, mesh, P(ba, None, None))
+    if cfg.is_encdec:
+        out["frames"] = _sds((batch, cfg.encdec.enc_len, cfg.d_model),
+                             jnp.bfloat16, mesh, P(ba, None, None))
+    out["tokens"] = _sds((batch, s_text), jnp.int32, mesh, P(ba, None))
+    if with_labels:
+        out["labels"] = _sds((batch, s_text), jnp.int32, mesh, P(ba, None))
+    return out
+
+
+# --------------------------------------------------------- cache shardings
+_CACHE_RANK = {"k": 4, "v": 4, "cross_k": 4, "cross_v": 4,
+               "c_kv": 3, "k_rope": 3, "ssm": 3, "conv": 3,
+               "C": 4, "n": 3, "m": 2,
+               "sc": 3, "sn": 3, "sh": 3, "sm": 3}
+# per-dim axes from the END of the array (after the batch dim)
+_CACHE_TAIL = {"k": (None, "model", None), "v": (None, "model", None),
+               "cross_k": (None, "model", None), "cross_v": (None, "model", None),
+               "c_kv": ("model", None), "k_rope": ("model", None),
+               "ssm": ("model", None), "conv": (None, "model"),
+               "C": (None, None, "model"), "n": (None, None), "m": (None,),
+               "sc": (None, None), "sn": (None, None),
+               "sh": (None, None), "sm": (None, None)}
+
+
+def cache_shardings(cache_shapes: Any, mesh, batch: int) -> Any:
+    ba = _batch_axes(mesh, batch)
+
+    def one(path, leaf):
+        name = None
+        for entry in reversed(path):
+            key = getattr(entry, "key", getattr(entry, "name", None))
+            if isinstance(key, str):
+                name = key
+                break
+        rank = _CACHE_RANK.get(name)
+        if rank is None:
+            return NamedSharding(mesh, P())
+        tail = _CACHE_TAIL[name]
+        ndim = leaf.ndim
+        axes = [None] * ndim
+        axes[ndim - rank] = ba          # batch dim
+        for i, a in enumerate(tail):
+            dim = ndim - len(tail) + i
+            if a is not None and a in mesh.axis_names \
+                    and leaf.shape[dim] % mesh.shape[a] == 0:
+                axes[dim] = a
+        return NamedSharding(mesh, P(*axes))
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def sds_with(shapes: Any, shardings: Any) -> Any:
+    return jax.tree.map(
+        lambda sh, s: jax.ShapeDtypeStruct(sh.shape, sh.dtype, sharding=s),
+        shapes, shardings)

@@ -1,0 +1,8 @@
+"""The 10-architecture model zoo in pure JAX."""
+
+from .config import (EncDecCfg, MambaCfg, MLACfg, ModelConfig, MoECfg, VLMCfg)
+from .lm import (decode_step, forward, init_caches, init_params, loss_fn)
+
+__all__ = ["ModelConfig", "MoECfg", "MLACfg", "MambaCfg", "EncDecCfg",
+           "VLMCfg", "init_params", "init_caches", "forward", "loss_fn",
+           "decode_step"]

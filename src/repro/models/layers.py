@@ -1,0 +1,72 @@
+"""Shared layer primitives: init helpers, RMSNorm, RoPE, SwiGLU MLP."""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.context import shard
+from .config import ModelConfig
+
+
+def pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, shape, std: float = 0.02, dtype=jnp.bfloat16):
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- RoPE
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, Dh); positions: (S,) or broadcastable."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (Dh/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (S, Dh/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- SwiGLU MLP
+def init_mlp(key, cfg: ModelConfig, d_ff: int = 0) -> Dict:
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    dt = pdtype(cfg)
+    p = {
+        "w_in": dense_init(k1, (cfg.d_model, d_ff), dtype=dt),
+        "w_out": dense_init(k3, (d_ff, cfg.d_model),
+                            std=0.02 / (2 * cfg.n_layers) ** 0.5, dtype=dt),
+    }
+    if cfg.mlp_gated:
+        p["w_gate"] = dense_init(k2, (cfg.d_model, d_ff), dtype=dt)
+    return p
+
+
+def apply_mlp(p: Dict, x: jax.Array) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, p["w_in"])
+    if "w_gate" in p:
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        h = h * jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype)
+    else:
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(h.dtype)
+    h = shard(h, "data", None, "model")
+    return jnp.einsum("bsf,fd->bsd", h, p["w_out"])
+
+
+def init_norm(cfg: ModelConfig) -> jax.Array:
+    return jnp.zeros((cfg.d_model,), pdtype(cfg))

@@ -1,0 +1,345 @@
+"""The composable LM: block assembly, scan-over-groups, train/prefill/decode.
+
+Layer stacks are grouped by the config's block pattern and `lax.scan`ned over
+stacked parameters: HLO size (and compile time at 512 fake devices) stays
+O(pattern length), not O(n_layers). Remat wraps the group body per
+``cfg.remat``. Encoder-decoder (whisper) and VLM (llava) wrap the same stack.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.context import shard
+from .attention import (attention_block, init_attention, init_mla,
+                        init_self_attn_cache, mla_block)
+from .config import ModelConfig
+from .layers import apply_mlp, dense_init, init_mlp, init_norm, pdtype, rms_norm
+from .moe import apply_moe, init_moe
+from .ssm import apply_mamba, init_mamba, init_mamba_state
+from .xlstm import (apply_mlstm, apply_slstm, init_mlstm, init_mlstm_state,
+                    init_slstm, init_slstm_state)
+
+
+# ================================================================ block init
+def init_block(key, blk: str, cfg: ModelConfig, cross: bool = False) -> Dict:
+    mixer, _, ffn = blk.partition("+")
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": init_norm(cfg)}
+    if mixer == "attn":
+        p["attn"] = init_attention(ks[0], cfg)
+    elif mixer == "mla":
+        p["mla"] = init_mla(ks[0], cfg)
+    elif mixer == "mamba":
+        p["mamba"] = init_mamba(ks[0], cfg)
+    elif mixer == "mlstm":
+        p["mlstm"] = init_mlstm(ks[0], cfg)
+    elif mixer == "slstm":
+        p["slstm"] = init_slstm(ks[0], cfg)
+    else:
+        raise ValueError(f"unknown mixer {mixer!r}")
+    if cross:
+        p["ln_c"] = init_norm(cfg)
+        p["cross"] = init_attention(ks[2], cfg)
+    if ffn == "mlp":
+        p["ln2"] = init_norm(cfg)
+        p["mlp"] = init_mlp(ks[1], cfg)
+    elif ffn == "moe":
+        p["ln2"] = init_norm(cfg)
+        p["moe"] = init_moe(ks[1], cfg)
+    return p
+
+
+def init_block_cache(blk: str, cfg: ModelConfig, batch: int, max_len: int,
+                     stack: int, cross_len: int = 0) -> Dict:
+    mixer, _, _ = blk.partition("+")
+    c: Dict[str, Any] = {}
+    if mixer in ("attn", "mla"):
+        c.update(init_self_attn_cache(cfg, batch, max_len, stack))
+    elif mixer == "mamba":
+        c.update(init_mamba_state(cfg, batch, stack))
+    elif mixer == "mlstm":
+        c.update(init_mlstm_state(cfg, batch, stack))
+    elif mixer == "slstm":
+        c.update(init_slstm_state(cfg, batch, stack))
+    if cross_len:
+        dt = pdtype(cfg)
+        KH, Dh = cfg.n_kv_heads, cfg.head_dim_
+        s = (stack,) if stack else ()
+        c["cross_k"] = jnp.zeros(s + (batch, KH, cross_len, Dh), dt)
+        c["cross_v"] = jnp.zeros(s + (batch, KH, cross_len, Dh), dt)
+    return c
+
+
+# ================================================================ block apply
+def apply_block(blk: str, p: Dict, x: jax.Array, cfg: ModelConfig, *,
+                positions: Optional[jax.Array] = None,
+                cache: Optional[Dict] = None,
+                cache_pos: Optional[jax.Array] = None,
+                enc_out: Optional[jax.Array] = None,
+                causal: bool = True,
+                use_rope: bool = True,
+                want_cache: bool = False,
+                cross_len: int = 0,
+                ) -> Tuple[jax.Array, jax.Array, Dict]:
+    mixer, _, ffn = blk.partition("+")
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, Any] = {}
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+
+    mixer_cache = None
+    if cache is not None:
+        mixer_cache = {k: v for k, v in cache.items()
+                       if not k.startswith("cross_")}
+    if mixer == "attn":
+        y, mc = attention_block(
+            p["attn"], h, cfg, causal=causal, positions=positions,
+            cache=mixer_cache, cache_pos=cache_pos, use_rope=use_rope,
+            want_cache=want_cache)
+        if mc:
+            new_cache.update(mc)
+    elif mixer == "mla":
+        y, mc = mla_block(p["mla"], h, cfg, positions=positions,
+                          cache=mixer_cache, cache_pos=cache_pos,
+                          want_cache=want_cache)
+        if mc:
+            new_cache.update(mc)
+    elif mixer == "mamba":
+        y, mc = apply_mamba(p["mamba"], h, cfg, state=mixer_cache,
+                            want_state=want_cache)
+        if mc:
+            new_cache.update(mc)
+    elif mixer == "mlstm":
+        y, mc = apply_mlstm(p["mlstm"], h, cfg, state=mixer_cache,
+                            want_state=want_cache)
+        if mc:
+            new_cache.update(mc)
+    elif mixer == "slstm":
+        y, mc = apply_slstm(p["slstm"], h, cfg, state=mixer_cache,
+                            want_state=want_cache)
+        if mc:
+            new_cache.update(mc)
+    else:
+        raise ValueError(mixer)
+    x = x + y
+
+    if "cross" in p:
+        hc = rms_norm(x, p["ln_c"], cfg.norm_eps)
+        if cache is not None and "cross_k" in cache:
+            yc, _ = attention_block(
+                p["cross"], hc, cfg, kv_x=None, use_rope=False,
+                cache={"k": cache["cross_k"], "v": cache["cross_v"]},
+                cache_pos=jnp.asarray(cross_len, jnp.int32), cross=True)
+            new_cache["cross_k"] = cache["cross_k"]
+            new_cache["cross_v"] = cache["cross_v"]
+        else:
+            yc, cc = attention_block(p["cross"], hc, cfg, kv_x=enc_out,
+                                     use_rope=False, want_cache=want_cache)
+            if cc:
+                new_cache["cross_k"] = cc["k"]
+                new_cache["cross_v"] = cc["v"]
+        x = x + yc
+
+    if ffn == "mlp":
+        x = x + apply_mlp(p["mlp"], rms_norm(x, p["ln2"], cfg.norm_eps))
+    elif ffn == "moe":
+        y2, aux2 = apply_moe(p["moe"], rms_norm(x, p["ln2"], cfg.norm_eps), cfg)
+        x = x + y2
+        aux = aux + aux2
+    return shard(x, "data", None, None), aux, new_cache
+
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+# ================================================================ params init
+def init_params(cfg: ModelConfig, key) -> Dict:
+    dt = pdtype(cfg)
+    ks = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": dense_init(ks[0], (cfg.padded_vocab, cfg.d_model), dtype=dt),
+        "final_norm": init_norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(ks[1], (cfg.d_model, cfg.padded_vocab),
+                                    dtype=dt)
+    if cfg.vlm is not None:
+        params["vision_proj"] = dense_init(ks[2], (cfg.d_model, cfg.d_model),
+                                           dtype=dt)
+    if cfg.first_layer_dense:
+        mixer = cfg.block_pattern[0].partition("+")[0]
+        params["first"] = init_block(ks[3], f"{mixer}+mlp", cfg)
+    cross = cfg.is_encdec
+
+    def stacked(key, blk, n, cross_):
+        return jax.vmap(lambda k: init_block(k, blk, cfg, cross_))(
+            jax.random.split(key, n))
+
+    gks = jax.random.split(ks[4], len(cfg.block_pattern))
+    params["groups"] = tuple(
+        stacked(gks[j], blk, cfg.n_groups, cross)
+        for j, blk in enumerate(cfg.block_pattern))
+    if cfg.is_encdec:
+        e = cfg.encdec
+        params["encoder"] = {
+            "pos_embed": dense_init(ks[5], (e.enc_len, cfg.d_model), dtype=dt),
+            "groups": (stacked(ks[6], "attn+mlp", e.enc_layers, False),),
+            "final_norm": init_norm(cfg),
+        }
+    return params
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int) -> Tuple:
+    cross_len = cfg.encdec.enc_len if cfg.is_encdec else 0
+    caches = tuple(
+        init_block_cache(blk, cfg, batch, max_len, stack=cfg.n_groups,
+                         cross_len=cross_len)
+        for blk in cfg.block_pattern)
+    first = (init_block_cache(f"{cfg.block_pattern[0].partition('+')[0]}+mlp",
+                              cfg, batch, max_len, stack=0)
+             if cfg.first_layer_dense else None)
+    return {"groups": caches, "first": first}
+
+
+# ================================================================== forward
+def _stack_forward(cfg: ModelConfig, groups, x, *, positions, enc_out,
+                   causal, use_rope, want_caches):
+    """Scan over layer groups; each group applies the whole block pattern."""
+
+    def group_body(carry, group_params):
+        x = carry
+        aux = jnp.zeros((), jnp.float32)
+        caches = []
+        for j, blk in enumerate(cfg.block_pattern):
+            x, a, c = apply_block(
+                blk, group_params[j], x, cfg,
+                positions=positions, enc_out=enc_out, causal=causal,
+                use_rope=use_rope, want_cache=want_caches)
+            aux = aux + a
+            caches.append(c)
+        return x, (aux, tuple(caches))
+
+    body = _remat(group_body, cfg)
+    x, (auxs, caches) = jax.lax.scan(body, x, groups)
+    return x, auxs.sum(), caches
+
+
+def _encode(cfg: ModelConfig, params, frames):
+    """Whisper encoder: frames are precomputed conv-frontend embeddings
+    (B, enc_len, D) — the modality stub per the assignment."""
+    enc = params["encoder"]
+    x = frames + enc["pos_embed"][None, :frames.shape[1], :].astype(frames.dtype)
+    x = shard(x, "data", None, None)
+
+    def enc_body(carry, gp):
+        x = carry
+        x, _, _ = apply_block("attn+mlp", gp, x, cfg, causal=False,
+                              use_rope=False)
+        return x, None
+
+    x, _ = jax.lax.scan(_remat(enc_body, cfg), x, enc["groups"][0])
+    return rms_norm(x, enc["final_norm"], cfg.norm_eps)
+
+
+def embed_inputs(cfg: ModelConfig, params, batch) -> Tuple[jax.Array, int]:
+    """Token (+ vision-prefix) embedding. Returns (x, n_prefix)."""
+    tokens = batch["tokens"]
+    x = params["embed"][tokens] * (cfg.d_model ** 0.5)
+    n_prefix = 0
+    if cfg.vlm is not None and "vision_embeds" in batch:
+        v = jnp.einsum("bpd,de->bpe", batch["vision_embeds"].astype(x.dtype),
+                       params["vision_proj"])
+        x = jnp.concatenate([v, x], axis=1)
+        n_prefix = v.shape[1]
+    return shard(x, "data", None, None), n_prefix
+
+
+def forward(cfg: ModelConfig, params: Dict, batch: Dict, *,
+            want_caches: bool = False):
+    """Full-sequence forward. Returns (logits, aux, caches)."""
+    x, n_prefix = embed_inputs(cfg, params, batch)
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    enc_out = None
+    if cfg.is_encdec:
+        enc_out = _encode(cfg, params, batch["frames"])
+
+    first_cache = None
+    if cfg.first_layer_dense:
+        blk = f"{cfg.block_pattern[0].partition('+')[0]}+mlp"
+        x, _, first_cache = apply_block(blk, params["first"], x, cfg,
+                                        positions=positions,
+                                        want_cache=want_caches)
+    x, aux, caches = _stack_forward(
+        cfg, params["groups"], x, positions=positions, enc_out=enc_out,
+        causal=True, use_rope=not cfg.is_encdec, want_caches=want_caches)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    logits = shard(logits, "data", None, "model")
+    cache_tree = ({"groups": caches, "first": first_cache}
+                  if want_caches else None)
+    return logits, aux, cache_tree, n_prefix
+
+
+def loss_fn(cfg: ModelConfig, params: Dict, batch: Dict) -> Tuple[jax.Array, Dict]:
+    logits, aux, _, n_prefix = forward(cfg, params, batch)
+    labels = batch["labels"]
+    if n_prefix:
+        logits = logits[:, n_prefix:]
+    logits = logits[:, :labels.shape[1]].astype(jnp.float32)
+    # mask vocab padding out of the partition function
+    vmask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+    logits = jnp.where(vmask[None, None, :], logits, -1e30)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold).mean()
+    loss = nll + aux
+    return loss, {"nll": nll, "aux": aux}
+
+
+# ================================================================== decode
+def decode_step(cfg: ModelConfig, params: Dict, caches: Dict,
+                tokens: jax.Array, pos: jax.Array):
+    """One serving step: tokens (B, 1) at absolute position `pos` given the
+    KV/state caches. Returns (logits, new_caches)."""
+    x = params["embed"][tokens] * (cfg.d_model ** 0.5)
+    x = shard(x, "data", None, None)
+    positions = pos + jnp.arange(x.shape[1])
+    cross_len = cfg.encdec.enc_len if cfg.is_encdec else 0
+
+    new_first = None
+    if cfg.first_layer_dense:
+        blk = f"{cfg.block_pattern[0].partition('+')[0]}+mlp"
+        x, _, new_first = apply_block(blk, params["first"], x, cfg,
+                                      positions=positions,
+                                      cache=caches["first"], cache_pos=pos,
+                                      cross_len=cross_len)
+
+    def group_body(carry, inp):
+        x = carry
+        gp, gc = inp
+        new_caches = []
+        for j, blk in enumerate(cfg.block_pattern):
+            x, _, nc = apply_block(blk, gp[j], x, cfg, positions=positions,
+                                   cache=gc[j], cache_pos=pos,
+                                   cross_len=cross_len)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, new_group_caches = jax.lax.scan(
+        group_body, x, (params["groups"], caches["groups"]))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, head)
+    return logits, {"groups": new_group_caches, "first": new_first}

@@ -1,0 +1,178 @@
+"""Top-k MoE with group-local capacity dispatch and expert parallelism.
+
+Dispatch evolution (measured in the dry-run; EXPERIMENTS.md §Perf):
+  * "scatter" — global sort + scatter into an (E, C, D) buffer. SPMD lowers
+    the cross-partition scatter into full-buffer partition reduces
+    (23 TB/step of all-reduce for granite-moe). Kept as the ablation baseline.
+  * "gather" (default) — GROUP-LOCAL dispatch: tokens reshape to
+    (G, T/G, D) with G sharded over the data axes, so the sort, the capacity
+    assignment, the dispatch gather and the combine gather are all
+    partition-local; experts stay sharded over 'model' (EP) and the only
+    cross-shard movement is the expert outputs crossing the model axis once.
+    Per-group capacity drops tokens per data shard (better locality than the
+    paper-classic global capacity; noted in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.context import axis_size, shard
+from .config import ModelConfig
+from .layers import apply_mlp, dense_init, init_mlp, pdtype
+
+
+def init_moe(key, cfg: ModelConfig) -> Dict:
+    m = cfg.moe
+    E = cfg.n_experts_padded
+    ks = jax.random.split(key, 5)
+    dt = pdtype(cfg)
+    p = {
+        "router": dense_init(ks[0], (cfg.d_model, E), std=0.006, dtype=jnp.float32),
+        "e_in": dense_init(ks[1], (E, cfg.d_model, m.d_expert), dtype=dt),
+        "e_gate": dense_init(ks[2], (E, cfg.d_model, m.d_expert), dtype=dt),
+        "e_out": dense_init(ks[3], (E, m.d_expert, cfg.d_model),
+                            std=0.02 / (2 * cfg.n_layers) ** 0.5, dtype=dt),
+    }
+    if m.n_shared:
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=m.n_shared * m.d_expert)
+    return p
+
+
+def _capacity(tokens_per_group: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    c = int(tokens_per_group * m.top_k * m.capacity_factor / cfg.n_experts_padded)
+    return max(64, ((c + 127) // 128) * 128)  # MXU-aligned
+
+
+def _route(xt: jax.Array, p: Dict, cfg: ModelConfig):
+    """Router probs + top-k (xt: (..., D))."""
+    m = cfg.moe
+    E = cfg.n_experts_padded
+    logits = xt.astype(jnp.float32) @ p["router"]
+    if E > m.n_experts:
+        logits = jnp.where(jnp.arange(E)[None, :] >= m.n_experts, -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, eidx = jax.lax.top_k(probs, m.top_k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    return probs, gate, eidx
+
+
+def apply_moe(p: Dict, x: jax.Array, cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D) -> (out, aux_loss)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    E, K = cfg.n_experts_padded, m.top_k
+    T = B * S
+    xt = x.reshape(T, D)
+
+    if cfg.moe_dispatch != "gather":
+        return _apply_moe_scatter(p, x, xt, cfg)
+
+    # ---- group-local dispatch ---------------------------------------------
+    G = 1
+    for cand in (axis_size("pod") * axis_size("data"), 16, 8, 4, 2):
+        if cand > 1 and T % cand == 0:
+            G = cand
+            break
+    Tl = T // G
+    C = _capacity(Tl, cfg)
+    xg = shard(xt.reshape(G, Tl, D), "data", None, None)
+
+    probs, gate, eidx = _route(xg, p, cfg)                     # (G,Tl,E/K)
+    flat_e = eidx.reshape(G, Tl * K)
+    order = jnp.argsort(flat_e, axis=-1, stable=True)          # (G, TlK)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    seg_start = jax.vmap(jnp.searchsorted)(sorted_e, jnp.broadcast_to(
+        jnp.arange(E), (G, E)))                                # (G, E)
+    pos_in_e = jnp.arange(Tl * K)[None, :] - jnp.take_along_axis(
+        seg_start, sorted_e, axis=-1)
+    keep = pos_in_e < C
+    src_tok = order // K                                       # (G, TlK)
+
+    counts = jnp.diff(jnp.concatenate(
+        [seg_start, jnp.full((G, 1), Tl * K)], axis=-1), axis=-1)  # (G, E)
+    slot_s = seg_start[:, :, None] + jnp.arange(C)[None, None, :]  # (G,E,C)
+    valid = jnp.arange(C)[None, None, :] < jnp.minimum(counts, C)[:, :, None]
+    slot_tok = jnp.where(
+        valid,
+        jnp.take_along_axis(src_tok, jnp.clip(slot_s, 0, Tl * K - 1)
+                            .reshape(G, E * C), axis=-1).reshape(G, E, C),
+        Tl)
+    xg_pad = jnp.concatenate([xg, jnp.zeros((G, 1, D), xg.dtype)], axis=1)
+    ebuf = jnp.take_along_axis(
+        xg_pad, slot_tok.reshape(G, E * C, 1), axis=1).reshape(G, E, C, D)
+    ebuf = shard(ebuf, "data", "model", None, None)
+
+    # ---- expert FFN: E over 'model' (EP), groups over 'data' — all local ----
+    h = jnp.einsum("gecd,edf->gecf", ebuf, p["e_in"])
+    g_ = jnp.einsum("gecd,edf->gecf", ebuf, p["e_gate"])
+    h = h * jax.nn.silu(g_.astype(jnp.float32)).astype(h.dtype)
+    y = jnp.einsum("gecf,efd->gecd", h, p["e_out"])            # (G,E,C,D)
+    y = shard(y, "data", None, None, None)   # expert outputs cross 'model' once
+
+    # ---- combine: group-local gathers + unsort ------------------------------
+    y_pad = jnp.concatenate([y.reshape(G, E * C, D),
+                             jnp.zeros((G, 1, D), y.dtype)], axis=1)
+    slot_sorted = jnp.where(keep, sorted_e * C + pos_in_e, E * C)  # (G,TlK)
+    inv = jnp.argsort(order, axis=-1)
+    slot_orig = jnp.take_along_axis(slot_sorted, inv, axis=-1)
+    contrib = jnp.take_along_axis(
+        y_pad, slot_orig.reshape(G, Tl * K, 1), axis=1)        # (G,TlK,D)
+    contrib = contrib * gate.reshape(G, Tl * K, 1).astype(y.dtype)
+    out = contrib.reshape(G, Tl, K, D).sum(axis=2).reshape(B, S, D)
+
+    aux = _aux_loss(probs.reshape(T, E), eidx.reshape(T, K), cfg)
+    if m.n_shared:
+        out = out + apply_mlp(p["shared"], x)
+    return shard(out, "data", None, None), aux
+
+
+def _aux_loss(probs, eidx, cfg) -> jax.Array:
+    E = cfg.n_experts_padded
+    density = jnp.mean(jax.nn.one_hot(eidx[:, 0], E, dtype=jnp.float32), axis=0)
+    density_proxy = jnp.mean(probs, axis=0)
+    return jnp.sum(density * density_proxy) * E * cfg.moe.router_aux_coef
+
+
+def _apply_moe_scatter(p: Dict, x: jax.Array, xt: jax.Array,
+                       cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    """Global sort + scatter dispatch (ablation baseline; see module doc)."""
+    m = cfg.moe
+    B, S, D = x.shape
+    E, K = cfg.n_experts_padded, m.top_k
+    T = B * S
+    C = _capacity(T, cfg)
+    probs, gate, eidx = _route(xt, p, cfg)
+    aux = _aux_loss(probs, eidx, cfg)
+
+    flat_e = eidx.reshape(T * K)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E))
+    pos_in_e = jnp.arange(T * K) - seg_start[sorted_e]
+    keep = pos_in_e < C
+    src_tok = order // K
+    dest_e = jnp.where(keep, sorted_e, E)
+    dest_c = jnp.where(keep, pos_in_e, 0)
+    buf = jnp.zeros((E + 1, C, D), xt.dtype)
+    buf = buf.at[dest_e, dest_c].set(xt[src_tok])
+    ebuf = shard(buf[:E], "model", "data", None)
+
+    h = jnp.einsum("ecd,edf->ecf", ebuf, p["e_in"])
+    g = jnp.einsum("ecd,edf->ecf", ebuf, p["e_gate"])
+    h = h * jax.nn.silu(g.astype(jnp.float32)).astype(h.dtype)
+    y = jnp.einsum("ecf,efd->ecd", h, p["e_out"])
+    y = shard(y, "model", "data", None)
+
+    y_pad = jnp.concatenate([y, jnp.zeros((1, C, D), y.dtype)], axis=0)
+    contrib = y_pad[dest_e, dest_c]
+    contrib = contrib * gate.reshape(T * K)[order][:, None].astype(y.dtype)
+    out = jnp.zeros((T, D), y.dtype).at[src_tok].add(contrib)
+    out = out.reshape(B, S, D)
+    if m.n_shared:
+        out = out + apply_mlp(p["shared"], x)
+    return shard(out, "data", None, None), aux

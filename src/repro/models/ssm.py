@@ -1,0 +1,118 @@
+"""Mamba selective SSM block (jamba's mixer), TPU-adapted.
+
+Training/prefill uses an associative scan over the sequence (log-depth on the
+TPU vector units); decode is the O(1) recurrent step carrying (conv window,
+SSM state). Channels (d_inner) are sharded over 'model' — every op is
+per-channel except the small x_proj/dt projections (row-parallel + psum).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.context import shard
+from .config import ModelConfig
+from .layers import dense_init, pdtype
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    c = cfg.mamba
+    d_inner = c.expand * cfg.d_model
+    dt_rank = c.dt_rank or max(1, cfg.d_model // 16)
+    return d_inner, dt_rank, c.d_state
+
+
+def init_mamba(key, cfg: ModelConfig) -> Dict:
+    c = cfg.mamba
+    Di, dtr, N = _dims(cfg)
+    D = cfg.d_model
+    ks = jax.random.split(key, 7)
+    dt = pdtype(cfg)
+    # S4-style A init: -[1..N] per channel
+    a = jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (Di, N))
+    return {
+        "m_in": dense_init(ks[0], (D, 2, Di), dtype=dt),
+        "m_conv": dense_init(ks[1], (c.conv_width, Di), std=0.1, dtype=dt),
+        "m_xproj": dense_init(ks[2], (Di, dtr + 2 * N), dtype=dt),
+        "m_dt": dense_init(ks[3], (dtr, Di), std=dtr ** -0.5, dtype=dt),
+        "m_dtb": jnp.full((Di,), -4.6, dt),   # softplus^-1(0.01)
+        "m_alog": jnp.log(a),
+        "m_d": jnp.ones((Di,), dt),
+        "m_out": dense_init(ks[5], (Di, D),
+                            std=0.02 / (2 * cfg.n_layers) ** 0.5, dtype=dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 state: Optional[jax.Array] = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. x: (B, S, Di), w: (W, Di).
+    Returns (out, new_state (B, W-1, Di))."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)            # (B, S+W-1, Di)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(W))
+    return out, xp[:, -(W - 1):, :]
+
+
+def apply_mamba(p: Dict, x: jax.Array, cfg: ModelConfig,
+                state: Optional[Dict] = None,
+                want_state: bool = False) -> Tuple[jax.Array, Optional[Dict]]:
+    """x: (B, S, D). With `state` ({'ssm': (B,Di,N), 'conv': (B,W-1,Di)}),
+    runs recurrent decode (S small, typically 1)."""
+    Di, dtr, N = _dims(cfg)
+    B, S, D = x.shape
+    xz = jnp.einsum("bsd,dti->bsti", x, p["m_in"])       # (B,S,2,Di)
+    x_in, z = xz[:, :, 0], xz[:, :, 1]
+    x_in = shard(x_in, "data", None, "model")
+
+    conv_state = state["conv"] if state is not None else None
+    x_c, new_conv = _causal_conv(x_in, p["m_conv"], conv_state)
+    u = jax.nn.silu(x_c.astype(jnp.float32)).astype(x.dtype)
+
+    dbc = jnp.einsum("bsi,ir->bsr", u, p["m_xproj"])     # (B,S,dtr+2N)
+    dt_in, Bc, Cc = jnp.split(dbc, [dtr, dtr + N], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_in, p["m_dt"]).astype(jnp.float32)
+        + p["m_dtb"].astype(jnp.float32))                # (B,S,Di)
+    A = -jnp.exp(p["m_alog"])                            # (Di,N)
+    dA = jnp.exp(dt[..., None] * A)                      # (B,S,Di,N)
+    dBx = (dt * u.astype(jnp.float32))[..., None] * Bc[:, :, None, :].astype(jnp.float32)
+
+    if state is None:
+        # associative scan over S: h_t = dA_t h_{t-1} + dBx_t
+        def combine(a, b):
+            a1, b1 = a
+            a2, b2 = b
+            return a1 * a2, b1 * a2 + b2
+        _, h = jax.lax.associative_scan(combine, (dA, dBx.astype(dA.dtype)), axis=1)
+        new_state = ({"ssm": h[:, -1], "conv": new_conv}
+                     if want_state else None)
+    else:
+        hs = []
+        h_prev = state["ssm"]
+        for t in range(S):  # decode: S is 1 (or tiny)
+            h_prev = dA[:, t] * h_prev + dBx[:, t]
+            hs.append(h_prev)
+        h = jnp.stack(hs, axis=1)
+        new_state = {"ssm": h_prev, "conv": new_conv}
+
+    y = jnp.einsum("bsin,bsn->bsi", h.astype(jnp.float32),
+                   Cc.astype(jnp.float32))
+    y = y + p["m_d"].astype(jnp.float32) * u.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    y = shard(y, "data", None, "model")
+    out = jnp.einsum("bsi,id->bsd", y, p["m_out"])
+    return shard(out, "data", None, None), new_state
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, stack: int = 0) -> Dict:
+    Di, _, N = _dims(cfg)
+    W = cfg.mamba.conv_width
+    dt = pdtype(cfg)
+    s = (stack,) if stack else ()
+    return {"ssm": jnp.zeros(s + (batch, Di, N), jnp.float32),
+            "conv": jnp.zeros(s + (batch, W - 1, Di), dt)}

@@ -1,0 +1,5 @@
+"""Serving substrate: batched decode engine fed by request streams."""
+
+from .engine import ServeEngine
+
+__all__ = ["ServeEngine"]

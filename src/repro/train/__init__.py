@@ -1,0 +1,7 @@
+"""Training substrate: optimizer, train step, checkpointing."""
+
+from .optimizer import AdamWConfig, adamw_init, adamw_update, opt_state_shardings
+from .step import make_train_step
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update",
+           "opt_state_shardings", "make_train_step"]

@@ -1,0 +1,108 @@
+"""Checkpointing on the diskless substrate (DESIGN.md §2/§6).
+
+Checkpoints use the SAME storage architecture as the log's data plane: workers
+write per-leaf objects to the shared object store, then commit an atomic
+manifest. A crash mid-write leaves the previous manifest intact (the
+FileObjectStore's atomic rename / the memory store's put are all-or-nothing),
+so restart always sees a consistent (step, params, opt, data-cursor) tuple.
+
+Restore is mesh-shape agnostic: leaves are stored unsharded (gathered), so a
+job restarted at a different DP width (elastic scaling) reshards on load; the
+data-pipeline cursor makes the batch stream resume exactly.
+"""
+
+from __future__ import annotations
+
+import io
+import json
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import ml_dtypes
+import numpy as np
+
+_EXOTIC = {"bfloat16": (ml_dtypes.bfloat16, np.uint16)}
+
+from ..core.objectstore import ObjectStore
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def _key(prefix: str, step: int, i: int) -> str:
+    return f"{prefix}/step-{step:08d}/leaf-{i:05d}.npy"
+
+
+class CheckpointManager:
+    def __init__(self, store: ObjectStore, prefix: str = "ckpt",
+                 keep: int = 3) -> None:
+        self.store = store
+        self.prefix = prefix
+        self.keep = keep
+
+    # ------------------------------------------------------------------ save
+    def save(self, step: int, params: Any, opt_state: Any,
+             extra: Optional[Dict] = None) -> None:
+        state = {"params": params, "opt": opt_state}
+        leaves, treedef = _flatten(state)
+        names = []
+        dtypes = []
+        for i, leaf in enumerate(leaves):
+            arr = np.asarray(jax.device_get(leaf))
+            dtypes.append(str(arr.dtype))
+            if str(arr.dtype) in _EXOTIC:   # numpy can't serialize bf16
+                arr = arr.view(_EXOTIC[str(arr.dtype)][1])
+            buf = io.BytesIO()
+            np.save(buf, arr, allow_pickle=False)
+            key = _key(self.prefix, step, i)
+            self.store.put(key, buf.getvalue())
+            names.append(key)
+        manifest = {
+            "step": step,
+            "leaves": names,
+            "dtypes": dtypes,
+            "treedef": jax.tree_util.tree_structure(state).serialize_using_proto().hex(),
+            "extra": extra or {},
+        }
+        # atomic commit: the manifest PUT is the linearization point
+        self.store.put(f"{self.prefix}/step-{step:08d}/MANIFEST.json",
+                       json.dumps(manifest).encode())
+        self.store.put(f"{self.prefix}/LATEST",
+                       str(step).encode())
+        self._gc(step)
+
+    def _gc(self, latest: int) -> None:
+        steps = sorted({int(k.split("step-")[1][:8])
+                        for k in self.store.list(self.prefix + "/")
+                        if "step-" in k})
+        for s in steps[:-self.keep]:
+            for k in self.store.list(f"{self.prefix}/step-{s:08d}/"):
+                self.store.delete(k)
+
+    # --------------------------------------------------------------- restore
+    def latest_step(self) -> Optional[int]:
+        if not self.store.exists(f"{self.prefix}/LATEST"):
+            return None
+        return int(self.store.get(f"{self.prefix}/LATEST"))
+
+    def restore(self, step: Optional[int] = None,
+                shardings: Any = None) -> Tuple[int, Any, Any, Dict]:
+        step = step if step is not None else self.latest_step()
+        assert step is not None, "no checkpoint found"
+        manifest = json.loads(
+            self.store.get(f"{self.prefix}/step-{step:08d}/MANIFEST.json"))
+        from jax.tree_util import PyTreeDef
+        td = PyTreeDef.deserialize_using_proto(
+            jax.tree_util.default_registry, bytes.fromhex(manifest["treedef"]))
+        leaves = []
+        for key, dt in zip(manifest["leaves"], manifest["dtypes"]):
+            arr = np.load(io.BytesIO(self.store.get(key)), allow_pickle=False)
+            if dt in _EXOTIC:
+                arr = arr.view(_EXOTIC[dt][0])
+            leaves.append(jax.numpy.asarray(arr))
+        state = jax.tree_util.tree_unflatten(td, leaves)
+        if shardings is not None:
+            state = jax.device_put(state, shardings)
+        return step, state["params"], state["opt"], manifest["extra"]

@@ -1,0 +1,61 @@
+"""Train-step builder: microbatch gradient accumulation + AdamW + bf16 grads.
+
+Gradient accumulation is a `lax.scan` over microbatches (activation memory is
+one microbatch); the cross-microbatch accumulator and the all-reduce happen in
+bf16 when ``grad_dtype`` says so (gradient compression — halves DP traffic).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.context import shard
+from ..models.config import ModelConfig
+from ..models.lm import loss_fn
+from .optimizer import AdamWConfig, adamw_update
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    accum: int = 1, grad_dtype: str = "bfloat16"):
+    gdt = jnp.dtype(grad_dtype)
+
+    def split_batch(batch: Dict) -> Dict:
+        def rs(x):
+            b = x.shape[0]
+            out = x.reshape((accum, b // accum) + x.shape[1:])
+            return shard(out, None, ("pod", "data"), *((None,) * (x.ndim - 1)))
+        return jax.tree.map(rs, batch)
+
+    def train_step(params: Any, opt_state: Dict, batch: Dict):
+        grad_fn = jax.value_and_grad(
+            lambda p, mb: loss_fn(cfg, p, mb), has_aux=True)
+
+        if accum == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(gdt), grads)
+        else:
+            mbs = split_batch(batch)
+
+            def body(carry, mb):
+                acc, loss_acc = carry
+                (loss, _metrics), g = grad_fn(params, mb)
+                acc = jax.tree.map(lambda a, x: a + x.astype(gdt), acc, g)
+                return (acc, loss_acc + loss), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, gdt), params)
+            (grads, loss_sum), _ = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)), mbs)
+            inv = 1.0 / accum
+            grads = jax.tree.map(lambda g: g * jnp.asarray(inv, gdt), grads)
+            loss = loss_sum * inv
+            metrics = {}
+        new_params, new_opt, gnorm = adamw_update(params, grads, opt_state,
+                                                  opt_cfg)
+        out_metrics = {"loss": loss, "grad_norm": gnorm}
+        return new_params, new_opt, out_metrics
+
+    return train_step

@@ -1,0 +1,112 @@
+"""Standalone trace debugger: replay a seed with op-by-op logging.
+
+Usage: PYTHONPATH=src python tests/_trace_debug.py SEED [cf_mode] [promote_mode]
+"""
+import sys
+
+sys.path.insert(0, "tests")
+from test_agilelog_semantics import TraceRunner  # noqa: E402
+
+
+def run(seed, cf_mode="ltt", promote_mode="copy", n=60, verbose=True):
+    runner = TraceRunner(seed, cf_mode=cf_mode, fork_mode="zerocopy",
+                         promote_mode=promote_mode)
+    rng = runner.rng
+    for i in range(n):
+        lid = rng.choice(runner.live)
+        h = runner.handles[lid]
+        op = rng.random()
+        desc = "?"
+        try:
+            if op < 0.35:
+                k = rng.randint(1, 3)
+                recs = [f"r{runner.rec_counter + j}".encode() for j in range(k)]
+                runner.rec_counter += k
+                desc = f"append({lid},k={k})"
+                b, o, err = runner._both(lambda: h.append_batch(recs),
+                                         lambda: runner.oracle.append(lid, recs))
+                if err is None:
+                    assert b == o, f"positions {b} vs {o}"
+            elif op < 0.5:
+                promotable = rng.random() < 0.4
+                desc = f"cfork({lid},prom={promotable})"
+                b, o, err = runner._both(lambda: h.cfork(promotable=promotable),
+                                         lambda: runner.oracle.cfork(lid, promotable))
+                if err is None:
+                    runner.handles[o] = b
+                    runner.live.append(o)
+                    desc += f" -> {o}"
+            elif op < 0.6:
+                past = None
+                if rng.random() < 0.4 and runner.oracle.tail(lid) > 0:
+                    past = rng.randrange(runner.oracle.tail(lid))
+                desc = f"sfork({lid},past={past})"
+                b, o, err = runner._both(lambda: h.sfork(past=past),
+                                         lambda: runner.oracle.sfork(lid, past))
+                if err is None:
+                    runner.handles[o] = b
+                    runner.live.append(o)
+                    desc += f" -> {o}"
+            elif op < 0.85:
+                tail = runner.oracle.tail(lid)
+                lo = rng.randint(0, max(0, tail))
+                hi = rng.randint(lo, max(lo, tail))
+                desc = f"read({lid},[{lo},{hi}))"
+                b, o, err = runner._both(lambda: h.read(lo, hi),
+                                         lambda: runner.oracle.read(lid, lo, hi))
+                if err is None:
+                    assert b == o, f"read mismatch {b} vs {o}"
+            elif op < 0.93:
+                mode = rng.choice(["copy", "splice"])
+                desc = f"promote({lid},{mode})"
+                b, o, err = runner._both(lambda: h.promote(mode=mode),
+                                         lambda: runner.oracle.promote(lid))
+                if err is None:
+                    runner._drop_dead()
+            else:
+                desc = f"squash({lid})"
+                b, o, err = runner._both(lambda: h.squash(),
+                                         lambda: runner.oracle.squash(lid))
+                if err is None:
+                    runner._drop_dead()
+            if verbose:
+                print(i, desc, "->", err or "ok")
+            runner._check_tails()
+        except AssertionError as e:
+            print("MISMATCH at", i, desc, ":", str(e)[:300])
+            dump(runner)
+            return runner
+        except Exception as e:
+            print("DIED at", i, desc, ":", type(e).__name__, str(e)[:300])
+            dump(runner)
+            return runner
+    runner.final_check()
+    print("trace OK")
+    return runner
+
+
+def dump(runner):
+    o = runner.oracle
+    st = runner.bolt.metadata.state
+    for l in runner.live:
+        ol = o.logs.get(l)
+        blid = runner.handles[l].log_id
+        m = st.logs.get(blid)
+        if ol and m:
+            runs = ([(r.start, r.n, r.lcum_start) for r in m.index.runs()]
+                    if hasattr(m.index, "runs") else "naive")
+            t = st.tails.get(blid) if st.tails.contains(blid) else "gone"
+            print(f"  o{l}/b{blid}: o(kind={ol.kind},parent={ol.parent},len={len(ol.records)})"
+                  f" b(kind={m.kind},parent={m.parent},pforks={m.promotable_forks},"
+                  f"ltt={t},runs={runs})")
+    print("  oracle holds:", [(h.parent, h.child, h.fp, h.caps) for h in o.holds])
+    frozen = {k: (v.parent, v.stands_for, sorted(v.hli_children))
+              for k, v in st.logs.items() if v.kind == "frozen"}
+    print("  bolt frozen:", frozen)
+
+
+if __name__ == "__main__":
+    seed = int(sys.argv[1])
+    cf = sys.argv[2] if len(sys.argv) > 2 else "ltt"
+    pm = sys.argv[3] if len(sys.argv) > 3 else "copy"
+    run(seed, cf, pm)

@@ -1,0 +1,107 @@
+"""Property tests: LazyTailTree (treap over Euler tour) vs eager oracle."""
+
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ltt import EagerTailMap, LazyTailTree
+
+
+def _apply_random_ops(seed: int, n_ops: int, check_every: int = 1):
+    rng = random.Random(seed)
+    ltt = LazyTailTree(seed=seed)
+    oracle = EagerTailMap()
+    live = []
+    next_id = 0
+
+    def new_root():
+        nonlocal next_id
+        ltt.add_root(next_id, tail0=rng.randrange(10))
+        oracle.add_root(next_id, tail0=ltt.get(next_id)[0])
+        live.append(next_id)
+        next_id += 1
+
+    new_root()
+    for step in range(n_ops):
+        op = rng.random()
+        if op < 0.25 or not live:
+            if rng.random() < 0.3 or not live:
+                new_root()
+            else:
+                parent = rng.choice(live)
+                t0, b0 = ltt.get(parent)
+                ltt.add_child(parent, next_id, t0, b0)
+                oracle.add_child(parent, next_id, t0, b0)
+                live.append(next_id)
+                next_id += 1
+        elif op < 0.65:
+            x = rng.choice(live)
+            dt = rng.randrange(1, 5)
+            db = rng.choice([-1, 0, 1])
+            ltt.range_add(x, dt, db)
+            oracle.range_add(x, dt, db)
+        elif op < 0.8 and len(live) > 1:
+            x = rng.choice(live[1:])  # keep first root alive
+            removed = sorted(ltt.remove_subtree(x))
+            removed_o = sorted(oracle.remove_subtree(x))
+            assert removed == removed_o
+            live[:] = [l for l in live if l not in removed]
+        elif op < 0.9 and len(live) > 1:
+            x = rng.choice(live[1:])
+            # only remove-keep-children for non-roots (oracle semantics match)
+            if oracle.parent.get(x) is not None:
+                ltt.remove_node_keep_children(x)
+                oracle.remove_node_keep_children(x)
+                live.remove(x)
+        if step % check_every == 0:
+            for l in live:
+                assert ltt.get(l) == oracle.get(l), f"mismatch at {l} step {step}"
+            # subtree order agreement on a sample
+            x = rng.choice(live)
+            assert ltt.subtree_ids(x) == oracle.subtree_ids(x)
+    # final full check
+    for l in live:
+        assert ltt.get(l) == oracle.get(l)
+
+
+@given(st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=60, deadline=None)
+def test_ltt_matches_oracle_random_traces(seed):
+    _apply_random_ops(seed, n_ops=120)
+
+
+def test_ltt_long_trace():
+    _apply_random_ops(seed=1234, n_ops=2000, check_every=10)
+
+
+def test_ltt_deep_chain():
+    ltt = LazyTailTree()
+    ltt.add_root(0, tail0=0)
+    for i in range(1, 300):
+        t, b = ltt.get(i - 1)
+        ltt.add_child(i - 1, i, t, b)
+    ltt.range_add(0, d_tail=7)          # hits every node
+    ltt.range_add(150, d_tail=5)        # hits deep half
+    assert ltt.get(0) == (7, 0)
+    assert ltt.get(149) == (7, 0)
+    assert ltt.get(150) == (12, 0)
+    assert ltt.get(299) == (12, 0)
+    ltt.remove_node_keep_children(150)  # 151 re-parents to 149
+    ltt.range_add(149, d_tail=1)
+    assert ltt.get(151) == (13, 0)
+    assert ltt.get(299) == (13, 0)
+
+
+def test_ltt_wide_fanout():
+    ltt = LazyTailTree()
+    oracle = EagerTailMap()
+    ltt.add_root(0)
+    oracle.add_root(0)
+    for i in range(1, 1001):
+        ltt.add_child(0, i, *ltt.get(0))
+        oracle.add_child(0, i, *oracle.get(0))
+    ltt.range_add(0, d_tail=3)
+    oracle.range_add(0, d_tail=3)
+    for i in (0, 1, 500, 1000):
+        assert ltt.get(i) == oracle.get(i) == (3, 0)

@@ -1,0 +1,114 @@
+"""Fault-tolerance tests for the replicated metadata layer."""
+
+import pytest
+
+from repro.core import BoltSystem
+from repro.core.errors import AgileLogError
+
+
+def _fill(log, n, prefix=b"r"):
+    for i in range(n):
+        log.append(prefix + str(i).encode())
+
+
+def test_leader_failover_preserves_committed_state():
+    sys = BoltSystem(n_brokers=2)
+    log = sys.create_log("root")
+    _fill(log, 20)
+    fork = log.cfork()
+    fork.append(b"fork-only")
+    assert sys.metadata.check_convergence()
+
+    old_leader = sys.metadata.leader_id
+    sys.metadata.fail_replica(old_leader)
+    assert sys.metadata.leader_id != old_leader
+
+    # committed state fully visible through the new leader
+    assert log.tail == 20
+    assert fork.tail == 21
+    assert fork.read(19, 21) == [b"r19", b"fork-only"]
+
+    # and the system still takes writes
+    _fill(log, 5, prefix=b"post")
+    assert log.tail == 25
+    assert fork.tail == 26  # cfork keeps inheriting across failover
+
+
+def test_no_quorum_rejects_writes():
+    sys = BoltSystem(n_brokers=2, n_meta_replicas=3)
+    log = sys.create_log("root")
+    sys.metadata.fail_replica(1)
+    log.append(b"ok-with-2-of-3")
+    with pytest.raises(RuntimeError):
+        sys.metadata.fail_replica(sys.metadata.leader_id)  # second failure: no quorum
+
+
+def test_replica_recovery_from_snapshot():
+    sys = BoltSystem(n_brokers=2, snapshot_every=10)
+    log = sys.create_log("root")
+    _fill(log, 25)
+    victim = (sys.metadata.leader_id + 1) % 3
+    sys.metadata.fail_replica(victim)
+    _fill(log, 25)   # progress while the replica is down
+    sys.metadata.recover_replica(victim)
+    # recovered replica converges (snapshot install + suffix replay)
+    r = sys.metadata.replicas[victim]
+    assert r.state.tail(log.log_id) == 50
+    assert sys.metadata.check_convergence()
+
+
+def test_failover_and_recovery_with_forks_and_promote():
+    sys = BoltSystem(n_brokers=3, snapshot_every=8)
+    log = sys.create_log("root")
+    _fill(log, 10)
+    agent_fork = log.cfork(promotable=True)
+    agent_fork.append(b"agent-1")
+    _fill(log, 3, prefix=b"live")
+
+    sys.metadata.fail_replica(sys.metadata.leader_id)
+
+    agent_fork.append(b"agent-2")
+    assert agent_fork.promote()
+    assert log.tail == 15
+    data = log.read(0, 15)
+    assert data.count(b"agent-1") == 1 and data.count(b"agent-2") == 1
+    # linearizable interleave survived the failover
+    assert data.index(b"agent-1") < data.index(b"live0") < data.index(b"agent-2")
+
+
+def test_deterministic_errors_do_not_diverge_replicas():
+    sys = BoltSystem(n_brokers=2)
+    log = sys.create_log("root")
+    _fill(log, 4)
+    pf = log.cfork(promotable=True)
+    _fill(log, 2)            # appends still fine (positions withheld)
+    with pytest.raises(AgileLogError):
+        log.sfork(past=None)  # forking beyond fp while hold active: rejected
+    pf.squash()
+    assert sys.metadata.check_convergence()
+    assert log.tail == 6
+
+
+def test_broker_failover_reroutes_transparently():
+    """Stateless brokers (§5.2): killing a fork's broker loses only its
+    cache; clients re-route and reads/appends continue (straggler story)."""
+    sys = BoltSystem(n_brokers=4)
+    log = sys.create_log("root")
+    _fill(log, 10)
+    fork = log.cfork()
+    fork.append(b"on-fork")
+    victim = fork.broker.broker_id
+    sys.fail_broker(victim)
+    assert fork.read(9, 11) == [b"r9", b"on-fork"]   # re-routed read
+    fork.append(b"after-failover")
+    assert fork.broker.broker_id != victim
+    assert fork.read(11, 12) == [b"after-failover"]
+
+
+def test_paper_deployment_config():
+    from repro.configs.bolt_paper import PAPER
+    sys = PAPER.make()
+    log = sys.create_log("root")
+    _fill(log, int(3 * PAPER.snapshot_every / 2))  # crosses a snapshot
+    assert sys.metadata.leader.snapshot_index >= 0
+    assert log.read(0, 2) == [b"r0", b"r1"]

@@ -1,0 +1,62 @@
+"""Serving engine + checkpoint substrate integration tests."""
+
+import jax
+import numpy as np
+
+from repro.core import BoltSystem
+from repro.models.config import ModelConfig
+from repro.models.lm import init_params
+from repro.serve import ServeEngine
+from repro.streams import Consumer, Producer, Topic
+from repro.train.checkpoint import CheckpointManager
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+
+
+def _tiny_cfg():
+    return ModelConfig(name="tiny", n_layers=2, d_model=32, n_heads=2,
+                       n_kv_heads=1, d_ff=64, vocab_size=128,
+                       tie_embeddings=True, attn_chunk=32)
+
+
+def test_serve_engine_roundtrip():
+    cfg = _tiny_cfg()
+    params = init_params(cfg, jax.random.key(0))
+    system = BoltSystem(n_brokers=3)
+    req = Topic.create(system, "req")
+    resp = Topic.create(system, "resp")
+    prod = Producer(req)
+    rng = np.random.default_rng(0)
+    for rid in range(3):
+        prod.produce({"id": rid,
+                      "prompt": [int(t) for t in rng.integers(2, 128, 5)]})
+    prod.flush()
+    eng = ServeEngine(cfg, params, req, resp, batch_size=4)
+    n = eng.poll_and_serve(gen_tokens=4)
+    assert n == 3
+    out = Consumer(resp).poll(8)
+    assert {r["id"] for r in out} == {0, 1, 2}
+    assert all(len(r["tokens"]) == 4 for r in out)
+    assert all(0 <= t < cfg.vocab_size for r in out for t in r["tokens"])
+    # idempotent-ish: nothing left to serve
+    assert eng.poll_and_serve() == 0
+
+
+def test_checkpoint_atomic_roundtrip_and_gc():
+    cfg = _tiny_cfg()
+    params = init_params(cfg, jax.random.key(1))
+    opt_cfg = AdamWConfig()
+    opt = adamw_init(params, opt_cfg)
+    system = BoltSystem(n_brokers=2)
+    ckpt = CheckpointManager(system.store, keep=2)
+    grads = jax.tree.map(lambda p: 0.01 * jax.numpy.ones_like(p), params)
+    for step in (10, 20, 30):
+        params, opt, _ = adamw_update(params, grads, opt, opt_cfg)
+        ckpt.save(step, params, opt, extra={"cursor": [step, 0]})
+    assert ckpt.latest_step() == 30
+    step, p2, o2, extra = ckpt.restore()
+    assert step == 30 and extra["cursor"] == [30, 0]
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # keep=2 garbage-collected step 10
+    assert not any("step-00000010" in k for k in system.store.list("ckpt/"))
+    assert any("step-00000020" in k for k in system.store.list("ckpt/"))

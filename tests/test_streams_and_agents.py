@@ -1,0 +1,197 @@
+"""Streaming layer + agent applications + training data pipeline tests."""
+
+import numpy as np
+import pytest
+
+from repro.agents import AnalyticsAgent, StreamTestingAgent, SupplyChainAgent
+from repro.agents.supplychain import InventoryConsumer
+from repro.core import BoltSystem
+from repro.data import LogDataPipeline, TokenStreamWriter, synthetic_token_docs
+from repro.streams import Consumer, Producer, Topic
+from repro.streams.records import encode_record
+from repro.streams.topics import StreamProcessor
+
+
+@pytest.fixture
+def system():
+    return BoltSystem(n_brokers=4)
+
+
+def _iot_topic(system, n=2000, anomalies=(500, 1500)):
+    topic = Topic.create(system, "iot")
+    prod = Producer(topic, linger_records=64)
+    rng = np.random.default_rng(0)
+    for i in range(n):
+        temp = float(rng.normal(20.0, 0.5))
+        hum = float(rng.normal(55.0, 1.0))
+        status = "ok"
+        if i in anomalies:
+            temp += 40.0
+            status = "sensor-fault"
+        prod.produce({"ts": i * 0.001, "temperature": temp,
+                      "humidity": hum, "status": status})
+    prod.flush()
+    return topic
+
+
+# ---------------------------------------------------------------- streams layer
+def test_producer_consumer_roundtrip(system):
+    topic = Topic.create(system, "t")
+    prod = Producer(topic, linger_records=8)
+    for i in range(100):
+        prod.produce({"i": i})
+    prod.flush()
+    cons = Consumer(topic)
+    got = []
+    while True:
+        batch = cons.poll(17)
+        if not batch:
+            break
+        got.extend(r["i"] for r in batch)
+    assert got == list(range(100))
+    cons.commit()
+    cons2 = Consumer.restore(topic)
+    assert cons2.offset == 100
+
+
+def test_stream_processor_windows(system):
+    topic = Topic.create(system, "w")
+    prod = Producer(topic, linger_records=16)
+    for i in range(50):
+        prod.produce({"ts": float(i), "value": 2.0})
+    prod.flush()
+    out = Topic.create(system, "w-out")
+    proc = StreamProcessor(topic, out, window_ms=10.0)
+    proc.run_to_tail()
+    assert len(proc.results) == 5
+    assert all(r.count == 10 and r.aggregate == 20.0 for r in proc.results)
+    assert out.tail == 5  # results written downstream
+
+
+# ---------------------------------------------------------------- agents (§6.8)
+def test_analytics_agent_finds_injected_anomalies(system):
+    topic = _iot_topic(system, n=3000, anomalies=(700, 2100))
+    root_tail_before = topic.tail
+    agent = AnalyticsAgent(topic, scan_limit=3000, chunk=512)
+    result = agent.run()
+    spikes = result["spikes"].get("temperature", [])
+    assert 700 in spikes and 2100 in spikes
+    assert sorted(result["bad_status_positions"]) == [700, 2100]
+    assert result["correlated"]  # spike correlated with sensor-fault status
+    agent.cleanup()
+    assert topic.tail == root_tail_before  # root untouched
+
+
+def test_testing_agent_finds_processor_bugs_in_isolation(system):
+    topic = Topic.create(system, "events")
+    prod = Producer(topic, linger_records=32)
+    for i in range(300):
+        prod.produce({"ts": i * 0.1, "value": 1.0})
+    prod.flush()
+    agent = StreamTestingAgent(topic, window_ms=5.0)
+    result = agent.run()
+    assert "malformed-records" in result["bugs_found"]   # strict proc crashes
+    assert "late-records" not in result["bugs_found"]
+    assert topic.tail == 300                             # no test event leaked
+    # all test forks were squashed
+    live = system.metadata.state.live_log_ids()
+    assert live == [topic.log.log_id]
+
+
+def test_supplychain_agent_safe_vs_direct(system):
+    def fill_orders(topic, n=40):
+        prod = Producer(topic, linger_records=8)
+        for i in range(n):
+            prod.produce({"kind": "order", "item": "widget", "qty": 1})
+        prod.flush()
+
+    # direct mode with a mistake: downstream consumer crashes (Kafka behavior)
+    t1 = Topic.create(system, "sc-direct")
+    fill_orders(t1)
+    agent = SupplyChainAgent(t1, inject_mistake=True)
+    agent.run_direct()
+    consumer = InventoryConsumer()
+    with pytest.raises(Exception):
+        consumer.process(t1)
+
+    # safe mode with the same mistake: validation fails, fork squashed, main
+    # stream unaffected; without the mistake, promote integrates the writes
+    t2 = Topic.create(system, "sc-safe")
+    fill_orders(t2)
+    validator = InventoryConsumer()
+    validator.process(t2)
+    bad_agent = SupplyChainAgent(t2, inject_mistake=True)
+    assert bad_agent.run_safe(validator) is False
+    assert bad_agent.squashes == 1
+    good_agent = SupplyChainAgent(t2)
+    assert good_agent.run_safe(validator) is True
+    consumer2 = InventoryConsumer()
+    consumer2.process(t2)  # no crash
+    assert consumer2.inventory["widget"] == -40 + 80  # orders + promoted restock
+
+
+# ------------------------------------------------------------- data pipeline
+def test_pipeline_resume_exactness(system):
+    topic = Topic.create(system, "tokens")
+    writer = TokenStreamWriter(topic, batch_docs=16)
+    for doc in synthetic_token_docs(200, vocab=1000, seed=3):
+        writer.write_doc(doc)
+    writer.flush()
+
+    pipe = LogDataPipeline(topic, batch_size=4, seq_len=128)
+    batches = [next(pipe) for _ in range(10)]
+    cursor = pipe.cursor()
+    more = [next(pipe) for _ in range(5)]
+
+    pipe2 = LogDataPipeline(topic, batch_size=4, seq_len=128)
+    pipe2.restore(cursor)
+    more2 = [next(pipe2) for _ in range(5)]
+    for a, b in zip(more, more2):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_pipeline_host_sharding_disjoint(system):
+    topic = Topic.create(system, "tokens2")
+    writer = TokenStreamWriter(topic, batch_docs=16)
+    for doc in synthetic_token_docs(100, vocab=500, seed=4):
+        writer.write_doc(doc)
+    writer.flush()
+    seen = []
+    for h in range(4):
+        pipe = LogDataPipeline(topic, batch_size=2, seq_len=64,
+                               host_id=h, num_hosts=4)
+        for _ in range(3):
+            seen.append(next(pipe))
+    # different hosts must produce different token streams
+    flat = [tuple(b.ravel()[:32]) for b in seen]
+    assert len(set(flat)) == len(flat)
+
+
+def test_pipeline_on_promoted_synthetic_data(system):
+    """Synthetic-data-agent story: inject curriculum docs on a promotable
+    cFork, validate, promote — the training pipeline sees them interleaved."""
+    topic = Topic.create(system, "tokens3")
+    writer = TokenStreamWriter(topic, batch_docs=8)
+    for doc in synthetic_token_docs(50, vocab=100, seed=5):
+        writer.write_doc(doc)
+    writer.flush()
+    fork = topic.cfork(promotable=True)
+    synth = np.full((64,), 7, dtype=np.int32)
+    for _ in range(10):
+        fork.log.append(synth.tobytes())
+    # validation: fork batches are well-formed
+    probe = LogDataPipeline(fork, batch_size=2, seq_len=32)
+    b = next(probe)
+    assert b.shape == (2, 33)
+    fork.log.promote()
+    assert topic.tail == 60
+    pipe = LogDataPipeline(topic, batch_size=2, seq_len=32)
+    found_synth = False
+    try:
+        while True:
+            if (next(pipe) == 7).sum() > 32:
+                found_synth = True
+                break
+    except StopIteration:
+        pass
+    assert found_synth
