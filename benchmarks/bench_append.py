@@ -1,0 +1,70 @@
+"""Group-commit append amortization benchmark (DESIGN.md §9).
+
+Appends the same record stream — round-robin across several logs co-located on
+one broker — once through the per-call append path and once with group commit,
+and reports metadata proposals and object PUTs *per appended record*, wall-
+clock throughput, and the amortization factor. The two streams must read back
+byte-identical; a mismatch aborts the benchmark (it would mean the batched
+proposal assigned different positions than per-call sequencing).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Optional, Tuple
+
+from repro.core import BoltSystem, GroupCommitConfig
+from repro.core.sim import OpTally
+
+from .common import RECORD, Row
+
+N_LOGS = 4
+N_RECORDS = 4096
+BATCH = 64
+
+
+def _run(group_commit: Optional[GroupCommitConfig]
+         ) -> Tuple[OpTally, float, List[List[bytes]]]:
+    system = BoltSystem(n_brokers=2, group_commit=group_commit)
+    logs = [system.create_log(f"log{i}") for i in range(N_LOGS)]
+    before = OpTally.capture(system)
+    start = time.perf_counter()
+    pending = []
+    for i in range(N_RECORDS):
+        out = logs[i % N_LOGS].append(RECORD)
+        if group_commit is not None:
+            pending.append(out)
+    system.flush()
+    for p in pending:
+        assert p.result() is not None
+    elapsed = time.perf_counter() - start
+    tally = OpTally.capture(system, records=N_RECORDS).delta(before)
+    reads = [log.read(0, N_RECORDS // N_LOGS) for log in logs]
+    return tally, elapsed, reads
+
+
+def bench_append() -> List[Row]:
+    pc_tally, pc_elapsed, pc_reads = _run(None)
+    gc_tally, gc_elapsed, gc_reads = _run(GroupCommitConfig(max_records=BATCH))
+    if pc_reads != gc_reads:
+        raise RuntimeError("group-commit read-back differs from per-call append")
+
+    rows: List[Row] = []
+    for label, tally, elapsed in [("per_call", pc_tally, pc_elapsed),
+                                  ("group_commit", gc_tally, gc_elapsed)]:
+        krec_s = N_RECORDS / elapsed / 1e3
+        rows.append((f"append/{label}/proposals_per_record",
+                     tally.proposals_per_record, f"{tally.proposals} proposals"))
+        rows.append((f"append/{label}/puts_per_record",
+                     tally.puts_per_record, f"{tally.puts} puts"))
+        rows.append((f"append/{label}/us_per_record",
+                     elapsed / N_RECORDS * 1e6, f"{krec_s:.1f} krec/s"))
+    rows.append(("append/amortization/proposals",
+                 pc_tally.proposals_per_record / gc_tally.proposals_per_record,
+                 f"batch={BATCH}, logs={N_LOGS}"))
+    rows.append(("append/amortization/puts",
+                 pc_tally.puts_per_record / gc_tally.puts_per_record,
+                 f"{gc_tally.bytes_put / max(1, gc_tally.puts):.0f} B/object"))
+    rows.append(("append/amortization/throughput",
+                 pc_elapsed / gc_elapsed, "wall-clock speedup"))
+    return rows

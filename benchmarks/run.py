@@ -1,16 +1,21 @@
 """Benchmark harness — one benchmark per paper table/figure (DESIGN.md §8).
 
 Prints ``name,us_per_call,derived`` CSV. Usage:
-    PYTHONPATH=src python -m benchmarks.run [--only substring]
+    PYTHONPATH=src python -m benchmarks.run [--only substring] [--json PATH]
+
+``--json`` additionally dumps ``{row_name: value}`` to PATH (e.g.
+``BENCH_append.json``) so the perf trajectory across PRs records real numbers.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
 from .bench_agents import bench_agents
+from .bench_append import bench_append
 from .bench_cforks import bench_cfork_ablation, bench_many_cforks
 from .bench_forks import (bench_fork_impact, bench_fork_latency,
                           bench_lookup_depth, bench_metadata_memory,
@@ -29,6 +34,7 @@ ALL = [
     ("fig11_promote", bench_promote),
     ("mem65_metadata_memory", bench_metadata_memory),
     ("fig12_14_agents", bench_agents),
+    ("append_group_commit", bench_append),
     ("data_pipeline", bench_pipeline),
     ("roofline", bench_roofline),
 ]
@@ -37,19 +43,26 @@ ALL = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None,
+                    help="also write {row_name: value} JSON to this path")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     failed = []
+    results = {}
     for name, fn in ALL:
         if args.only and args.only not in name:
             continue
         try:
             for row_name, val, derived in fn():
                 print(f"{row_name},{val:.3f},{derived}", flush=True)
+                results[row_name] = val
         except Exception as e:  # keep the harness running
             failed.append(name)
             traceback.print_exc(file=sys.stderr)
             print(f"{name}/ERROR,0.0,{type(e).__name__}: {e}", flush=True)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(results, f, indent=2, sort_keys=True)
     if failed:
         sys.exit(1)
 

@@ -2,7 +2,7 @@
 
 30L d_model=576 9H (GQA kv=3) d_ff=1536 vocab=49152. Heads (9) don't divide
 the 16-way model axis: attention weights replicate over 'model' (tiny model —
-DESIGN.md §6 fallback); MLP/vocab dims still TP-shard.
+DESIGN.md §5 divisibility fallback); MLP/vocab dims still TP-shard.
 """
 from ..models.config import ModelConfig
 

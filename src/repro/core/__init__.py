@@ -12,9 +12,10 @@ Layers (bottom-up):
 """
 
 from .api import AgileLog, BoltSystem
+from .broker import GroupCommitConfig, PendingAppend
 from .errors import AgileLogError, ForkBlocked, InvalidOperation, UnknownLog
 
 __all__ = [
-    "AgileLog", "BoltSystem",
+    "AgileLog", "BoltSystem", "GroupCommitConfig", "PendingAppend",
     "AgileLogError", "ForkBlocked", "InvalidOperation", "UnknownLog",
 ]

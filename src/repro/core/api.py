@@ -15,13 +15,21 @@ interface verbatim::
 Fork placement policy (§5.7): a fork is served by a broker *different from its
 parent's* (performance isolation) but forks of the same parent are co-located
 (cache reuse, less metadata-layer load) unless ``dedicated=True``.
+
+Group commit (DESIGN.md §9) is opt-in via ``BoltSystem(group_commit=...)``:
+``True`` for defaults, an int for a record-count flush threshold, or a full
+:class:`~repro.core.broker.GroupCommitConfig`. With it on, ``append`` /
+``append_batch`` return :class:`~repro.core.broker.PendingAppend` handles that
+resolve at flush commit; ``BoltSystem.flush()`` (or leaving the system's
+``with`` block) commits all staged records, and reads of a staged log flush
+first, so read-your-writes is preserved. Default-off callers are unchanged.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Union
 
-from .broker import Broker
+from .broker import Broker, GroupCommitConfig, PendingAppend
 from .errors import InvalidOperation
 from .objectstore import MemoryObjectStore, ObjectStore
 from .raft import MetadataService
@@ -31,15 +39,45 @@ class BoltSystem:
     def __init__(self, n_brokers: int = 4, store: Optional[ObjectStore] = None,
                  n_meta_replicas: int = 3, snapshot_every: int = 0,
                  cf_mode: str = "ltt", fork_mode: str = "zerocopy",
-                 promote_mode: str = "copy") -> None:
+                 promote_mode: str = "copy",
+                 group_commit: Union[None, bool, int, GroupCommitConfig] = None) -> None:
+        if group_commit is True:
+            group_commit = GroupCommitConfig()
+        elif group_commit is False or group_commit == 0:
+            group_commit = None   # falsy: group commit off
+        elif isinstance(group_commit, int):
+            if group_commit < 0:
+                raise ValueError(f"group_commit batch size must be >= 0, got {group_commit}")
+            group_commit = GroupCommitConfig(max_records=group_commit)
+        elif group_commit is not None and not isinstance(group_commit, GroupCommitConfig):
+            raise TypeError(f"group_commit must be None, bool, int, or "
+                            f"GroupCommitConfig, got {type(group_commit).__name__}")
+        self.group_commit: Optional[GroupCommitConfig] = group_commit
         self.store = store if store is not None else MemoryObjectStore()
         self.metadata = MetadataService(
             n_replicas=n_meta_replicas, snapshot_every=snapshot_every,
             cf_mode=cf_mode, fork_mode=fork_mode, promote_mode=promote_mode)
-        self.brokers = [Broker(i, self.store, self.metadata)
+        self.brokers = [Broker(i, self.store, self.metadata,
+                               group_commit=group_commit)
                         for i in range(max(2, n_brokers))]
         self._fork_broker: Dict[int, int] = {}   # parent log -> broker for its forks
         self._next_broker = 1
+
+    # -- group commit (DESIGN.md §9) ------------------------------------------------
+    def flush(self) -> None:
+        """Commit every broker's staging buffer (no-op when group commit is off)."""
+        for b in self.brokers:
+            b.flush()
+
+    def __enter__(self) -> "BoltSystem":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        # only flush on clean exit: a failing flush must not mask the body's
+        # in-flight exception (staged records were never acked; the caller can
+        # still flush() manually after handling the error)
+        if exc_type is None:
+            self.flush()
 
     # -- placement ----------------------------------------------------------------
     def _broker_for_root(self) -> Broker:
@@ -71,9 +109,11 @@ class BoltSystem:
     def fail_broker(self, broker_id: int) -> None:
         """Mark a broker dead; clients transparently re-route (brokers are
         stateless — §5.2 — so reassignment is metadata-free; the object cache
-        is the only loss)."""
+        and any *unflushed* group-commit staging — records that were never
+        acked — are the only loss)."""
         self._dead = getattr(self, "_dead", set())
         self._dead.add(broker_id)
+        self.brokers[broker_id].discard_staging()
         for parent, b in list(self._fork_broker.items()):
             if b == broker_id:
                 del self._fork_broker[parent]
@@ -104,42 +144,69 @@ class AgileLog:
             self.broker = b
         return b
 
-    def append(self, record: bytes) -> Optional[int]:
+    def _sync(self) -> Broker:
+        """Broker handle with this log's staged records committed: metadata
+        operations (tails, forks, promote, squash) must observe the caller's
+        own prior appends (read-your-writes, DESIGN.md §9), so they flush a
+        staging buffer holding records of this log first."""
+        b = self._b()
+        b._flush_if_staged(self.log_id)
+        return b
+
+    def append(self, record: bytes) -> Union[Optional[int], PendingAppend]:
+        """Per-call mode: returns the assigned position (None when withheld,
+        §4.1). Group-commit mode: stages the record and returns a
+        :class:`PendingAppend` — ``result()[0]`` after flush is the position."""
+        if self.system.group_commit is not None:
+            return self._b().stage(self.log_id, [record])
         positions, _ = self._b().append(self.log_id, [record])
         return None if positions is None else positions[0]
 
-    def append_batch(self, records: Sequence[bytes]) -> Optional[List[int]]:
+    def append_batch(self, records: Sequence[bytes]
+                     ) -> Union[Optional[List[int]], PendingAppend]:
+        if self.system.group_commit is not None:
+            return self._b().stage(self.log_id, list(records))
         positions, _ = self._b().append(self.log_id, list(records))
         return positions
+
+    def flush(self) -> None:
+        """Commit this log's broker staging buffer (group commit, DESIGN.md §9)."""
+        self._b().flush()
 
     def read(self, lo: int, hi: int) -> List[bytes]:
         return self._b().read_records(self.log_id, lo, hi)
 
     @property
     def tail(self) -> int:
+        self._sync()
         return self.system.metadata.state.tail(self.log_id)
 
     @property
     def visible_tail(self) -> int:
+        self._sync()
         return self.system.metadata.state.visible_tail(self.log_id)
 
     # -- forking -----------------------------------------------------------------------
     def cfork(self, promotable: bool = False, dedicated: bool = False) -> "AgileLog":
+        self._sync()
         child_id = self.system.metadata.propose(("cfork", self.log_id, promotable))
         broker = self.system._broker_for_fork(self.log_id, self.broker.broker_id,
                                               dedicated)
         return AgileLog(self.system, child_id, broker)
 
     def sfork(self, past: Optional[int] = None, dedicated: bool = False) -> "AgileLog":
+        self._sync()
         child_id = self.system.metadata.propose(("sfork", self.log_id, past))
         broker = self.system._broker_for_fork(self.log_id, self.broker.broker_id,
                                               dedicated)
         return AgileLog(self.system, child_id, broker)
 
     def promote(self, mode: Optional[str] = None) -> bool:
+        self._sync()
         return self.system.metadata.propose(("promote", self.log_id, mode))
 
     def squash(self) -> None:
+        self._sync()
         self.system.metadata.propose(("squash", self.log_id))
 
     def __repr__(self) -> str:

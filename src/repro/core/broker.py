@@ -1,10 +1,17 @@
-"""Stateless brokers (§5.2-5.3): the diskless data plane.
+"""Stateless brokers (§5.2-5.3, DESIGN.md §6): the diskless data plane.
 
 A broker owns no durable state: appends batch client records into a single
 object, PUT it to shared storage, then sequence the per-record metadata through
 the metadata layer (steps a1-a7 of Fig. 3). Reads resolve byte spans at the
 metadata layer and ranged-GET them from shared storage through a local object
 cache (r1-r7).
+
+With *group commit* enabled (DESIGN.md §9) the broker additionally amortizes
+the data- and metadata-plane round trips across concurrent appenders: records
+are staged into a per-broker buffer and flushed — by record-count, byte, or
+DES-time policy — as ONE segment object PUT plus ONE batched metadata proposal
+covering every staged log. Appenders get a :class:`PendingAppend` that
+resolves to their assigned positions when the flush commits.
 
 Brokers double as DES resources for the isolation benchmarks: when a
 :class:`~repro.core.sim.Simulator` is attached, each operation also books
@@ -15,12 +22,69 @@ is how contention (or its absence) is measured without real hardware.
 from __future__ import annotations
 
 import itertools
+from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
-from .objectstore import LRUObjectCache, ObjectStore
+from . import errors as _errors
+from .errors import AgileLogError
+from .objectstore import LRUObjectCache, ObjectStore, SegmentWriter
 from .sim import Resource, ServiceTimes, Simulator
 
 _obj_counter = itertools.count()
+
+
+@dataclass
+class GroupCommitConfig:
+    """Flush policy for the group-commit staging buffer (DESIGN.md §9).
+
+    A flush is triggered by whichever bound is hit first: staged record count,
+    staged payload bytes, or — when appends carry DES arrival times — a record
+    arriving more than ``max_delay`` simulated seconds after the oldest staged
+    one. Explicit ``flush()`` and reads of a staged log also flush.
+    """
+
+    max_records: int = 64
+    max_bytes: int = 1 << 20
+    max_delay: float = 500e-6
+
+
+class PendingAppend:
+    """Deferred ack for a staged append: resolves at flush commit.
+
+    ``result()`` forces a flush of the owning broker if the batch has not
+    committed yet, then returns the assigned positions (or ``None`` when an
+    active promotable cFork withholds them, §4.1) or raises the deterministic
+    error the metadata layer produced for this log.
+    """
+
+    __slots__ = ("broker", "log_id", "n", "done", "done_time",
+                 "_positions", "_error")
+
+    def __init__(self, broker: "Broker", log_id: int, n: int) -> None:
+        self.broker = broker
+        self.log_id = log_id
+        self.n = n
+        self.done = False
+        self.done_time = 0.0
+        self._positions: Optional[List[int]] = None
+        self._error: Optional[Exception] = None
+
+    def _resolve(self, positions: Optional[List[int]], done_time: float) -> None:
+        self._positions = positions
+        self.done = True
+        self.done_time = done_time
+
+    def _fail(self, error: Exception, done_time: float) -> None:
+        self._error = error
+        self.done = True
+        self.done_time = done_time
+
+    def result(self) -> Optional[List[int]]:
+        if not self.done:
+            self.broker.flush()
+        if self._error is not None:
+            raise self._error
+        return self._positions
 
 
 class Broker:
@@ -28,11 +92,19 @@ class Broker:
                  cache_bytes: int = 64 << 20,
                  sim: Optional[Simulator] = None,
                  service: Optional[ServiceTimes] = None,
-                 store_resource: Optional[Resource] = None) -> None:
+                 store_resource: Optional[Resource] = None,
+                 group_commit: Optional[GroupCommitConfig] = None) -> None:
         self.broker_id = broker_id
         self.store = store
         self.metadata = metadata
         self.cache = LRUObjectCache(store, cache_bytes)
+        # group-commit staging (DESIGN.md §9)
+        self.group_commit = group_commit
+        self._staged: List[Tuple[PendingAppend, List[bytes]]] = []
+        self._staged_bytes = 0
+        self._staged_records = 0
+        self._staged_first_arrival: Optional[float] = None
+        self.flushes = 0
         # DES hooks
         self.sim = sim
         self.service = service or ServiceTimes()
@@ -60,8 +132,93 @@ class Broker:
         done = self._book(arrival, write_bytes=len(payload))
         return positions, done
 
+    # -- group-commit staging (DESIGN.md §9) ---------------------------------------
+    def stage(self, log_id: int, records: Sequence[bytes],
+              arrival: Optional[float] = None) -> PendingAppend:
+        """Stage an append into the group-commit buffer; returns a
+        :class:`PendingAppend` acked at flush commit. Requires ``group_commit``."""
+        cfg = self.group_commit
+        assert cfg is not None, "stage() requires a group_commit config"
+        if (arrival is not None and self._staged
+                and self._staged_first_arrival is not None
+                and arrival - self._staged_first_arrival >= cfg.max_delay):
+            # DES-time deadline: the old batch must not wait for this record
+            self.flush(arrival=arrival)
+        pending = PendingAppend(self, log_id, len(records))
+        self._staged.append((pending, list(records)))
+        self._staged_bytes += sum(len(r) for r in records)
+        self._staged_records += len(records)
+        if arrival is not None and self._staged_first_arrival is None:
+            self._staged_first_arrival = arrival
+        self.appends += 1
+        if (self._staged_records >= cfg.max_records
+                or self._staged_bytes >= cfg.max_bytes):
+            self.flush(arrival=arrival)
+        return pending
+
+    def flush(self, arrival: Optional[float] = None) -> float:
+        """Commit the staging buffer: ONE segment-object PUT + ONE batched
+        metadata proposal for all staged logs, then ack every PendingAppend."""
+        if not self._staged:
+            return arrival if arrival is not None else 0.0
+        staged, self._staged = self._staged, []
+        self._staged_bytes = 0
+        self._staged_records = 0
+        self._staged_first_arrival = None
+        writer = SegmentWriter()
+        slices = []   # (pending, entry_index, start slot within the entry)
+        for pending, records in staged:
+            entry_index, start = writer.add(pending.log_id, records)
+            slices.append((pending, entry_index, start))
+        payload, entries = writer.finish()
+        object_id = f"seg-{self.broker_id}-{next(_obj_counter)}"
+        try:
+            self.store.put(object_id, payload)
+            outcomes = self.metadata.propose(
+                ("append_batch_multi",
+                 tuple((lid, object_id, offs, lens) for lid, offs, lens in entries)))
+        except Exception as e:
+            # a failed flush (store error, lost metadata quorum) must not
+            # strand the batch: nothing was acked, so every pending FAILS —
+            # result() returning None here would masquerade as the §4.1
+            # "committed, positions withheld" success case
+            for pending, _entry_index, _start in slices:
+                pending._fail(AgileLogError(f"group-commit flush failed: {e}"), 0.0)
+            raise
+        self.flushes += 1
+        done = self._book(arrival, write_bytes=len(payload))
+        for pending, entry_index, start in slices:
+            outcome = outcomes[entry_index]
+            if outcome[0] == "ok":
+                pending._resolve(outcome[1][start:start + pending.n], done)
+            elif outcome[0] == "hidden":
+                pending._resolve(None, done)
+            else:
+                _, exc_name, msg = outcome
+                exc_cls = getattr(_errors, exc_name, AgileLogError)
+                pending._fail(exc_cls(msg), done)
+        return done
+
+    def discard_staging(self) -> None:
+        """Broker failure: staged records were never acked, so they are LOST,
+        not committed — each PendingAppend fails instead of resolving."""
+        staged, self._staged = self._staged, []
+        self._staged_bytes = 0
+        self._staged_records = 0
+        self._staged_first_arrival = None
+        for pending, _records in staged:
+            pending._fail(AgileLogError(
+                f"broker {self.broker_id} failed before flush; append not committed"),
+                0.0)
+
+    def _flush_if_staged(self, log_id: int) -> None:
+        """Read-your-writes: reads of a log with staged records flush first."""
+        if self._staged and any(p.log_id == log_id for p, _ in self._staged):
+            self.flush()
+
     def read(self, log_id: int, lo: int, hi: int,
              arrival: Optional[float] = None) -> Tuple[List[bytes], float]:
+        self._flush_if_staged(log_id)
         spans = self.metadata.state.read_spans(log_id, lo, hi)
         blobs = self.cache.get_spans(spans)
         self.reads += 1
@@ -70,6 +227,7 @@ class Broker:
 
     def read_records(self, log_id: int, lo: int, hi: int) -> List[bytes]:
         """Read and return individual records (one span per record)."""
+        self._flush_if_staged(log_id)
         spans = self.metadata.state.read_record_spans(log_id, lo, hi)
         return [self.cache.get(obj, off, ln) for (obj, off, ln) in spans]
 

@@ -36,7 +36,7 @@ from typing import Dict, List, Optional, Set, Tuple
 
 import numpy as np
 
-from .errors import ForkBlocked, InvalidOperation, UnknownLog
+from .errors import AgileLogError, ForkBlocked, InvalidOperation, UnknownLog
 from .index import NaiveIndex, RunIndex, Span
 from .ltt import EagerTailMap, LazyTailTree
 
@@ -146,6 +146,31 @@ class MetadataState:
         if self._holds(meta):
             return None  # §4.1: positions beyond a promotable fork point are withheld
         return list(range(tail, tail + k))
+
+    def _apply_append_batch_multi(self, entries: Tuple) -> List[Tuple]:
+        """One SMR command sequencing appends for several logs (group commit,
+        DESIGN.md §9). ``entries`` is a tuple of ``(log_id, object_id,
+        offsets, lengths)`` — typically all referencing one segment object.
+
+        Entries are applied in order; each commits or fails *independently but
+        deterministically* (a blocked log must not veto its batch-mates, and
+        every replica reaches the identical state either way). Failures are
+        therefore returned as values, not raised: the per-entry outcomes are
+        ``("ok", positions)`` | ``("hidden", None)`` (positions withheld by a
+        promotable cFork) | ``("error", exc_type_name, message)``.
+        """
+        outcomes: List[Tuple] = []
+        for log_id, object_id, offsets, lengths in entries:
+            try:
+                positions = self._apply_append(log_id, object_id, offsets, lengths)
+            except AgileLogError as e:
+                outcomes.append(("error", type(e).__name__, str(e)))
+            else:
+                if positions is None:
+                    outcomes.append(("hidden", None))
+                else:
+                    outcomes.append(("ok", positions))
+        return outcomes
 
     def _check_forkable(self, meta: LogMeta) -> int:
         if self._blocked_for_ops(meta):

@@ -132,6 +132,61 @@ class FileObjectStore(ObjectStore):
         return sorted(out)
 
 
+class SegmentWriter:
+    """Builder for segment-style multi-log objects (group commit, DESIGN.md §9).
+
+    A group-commit flush packs the records of many staged appends — possibly
+    for several different logs — into one object::
+
+        payload = records of append 0 || records of append 1 || ...
+
+    ``add()`` returns where the append landed inside its log's *entry* (all
+    appends for one log are merged, in staging order, into a single entry of
+    the batched metadata proposal); ``finish()`` returns the payload plus the
+    per-log ``(log_id, offsets, lengths)`` table that proposal carries. Byte
+    offsets are absolute within the segment object, so readers ranged-GET a
+    record without knowing anything about the batch that produced it.
+    """
+
+    def __init__(self) -> None:
+        self._chunks: List[bytes] = []
+        self._size = 0
+        self._log_ids: List[int] = []
+        self._spans: List[Tuple[List[int], List[int]]] = []  # per-entry (offsets, lengths)
+        self._entry_of: Dict[int, int] = {}
+
+    def add(self, log_id: int, records: Iterable[bytes]) -> Tuple[int, int]:
+        """Append `records` for `log_id`; returns (entry_index, start) — the
+        entry's position in the batch and the records' start slot within it."""
+        entry_index = self._entry_of.get(log_id)
+        if entry_index is None:
+            entry_index = self._entry_of[log_id] = len(self._log_ids)
+            self._log_ids.append(log_id)
+            self._spans.append(([], []))
+        offsets, lengths = self._spans[entry_index]
+        start = len(offsets)
+        for r in records:
+            self._chunks.append(r)
+            offsets.append(self._size)
+            lengths.append(len(r))
+            self._size += len(r)
+        return entry_index, start
+
+    @property
+    def nbytes(self) -> int:
+        return self._size
+
+    @property
+    def nrecords(self) -> int:
+        return sum(len(offs) for offs, _ in self._spans)
+
+    def finish(self) -> Tuple[bytes, List[Tuple[int, Tuple[int, ...], Tuple[int, ...]]]]:
+        payload = b"".join(self._chunks)
+        entries = [(log_id, tuple(offs), tuple(lens))
+                   for log_id, (offs, lens) in zip(self._log_ids, self._spans)]
+        return payload, entries
+
+
 class LRUObjectCache:
     """Broker-side object cache (§5.7: "we equip brokers with a local object cache").
 

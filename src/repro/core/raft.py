@@ -130,11 +130,16 @@ class MetadataService:
         if replica_hint is not None and replica_hint != self.leader_id:
             raise NotLeader(f"replica {replica_hint} is not the leader")
         entry = _Entry(self.term, cmd)
-        acks = 0
+        acked = []
         for r in self.replicas:
             if r.alive and r.append_entry(entry):
-                acks += 1
-        if acks * 2 <= len(self.replicas):
+                acked.append(r)
+        if len(acked) * 2 <= len(self.replicas):
+            # roll back: the entry was never committed (nor applied anywhere),
+            # so leaving it in minority logs would skew the global index of
+            # every later proposal after recovery
+            for r in acked:
+                r.log.pop()
             raise RuntimeError("no quorum: append not committed")
         # global index of the just-appended entry: entries [0..snapshot_index]
         # are compacted, so global = snapshot_index + local_length
@@ -172,7 +177,17 @@ class MetadataService:
         return self.leader.state
 
     def check_convergence(self) -> bool:
-        """All alive replicas have identical applied state (test hook)."""
-        blobs = {pickle.dumps(sorted(r.state.live_log_ids()))
+        """All alive replicas have identical applied state (test hook).
+
+        The digest covers live log ids AND per-log tails, so a replica that
+        diverged in *content* while agreeing on *membership* — e.g. by
+        replaying a batched append differently after a snapshot restore — is
+        caught, not just one that lost a whole log.
+        """
+        def digest(state: MetadataState) -> bytes:
+            ids = state.live_log_ids()
+            return pickle.dumps([(lid, state.tails.get(lid)) for lid in ids])
+
+        blobs = {digest(r.state)
                  for r in self.replicas if r.alive and r.commit_index == self.leader.commit_index}
         return len(blobs) <= 1

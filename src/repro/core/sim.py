@@ -79,6 +79,50 @@ class Resource:
         self.jobs += 1
         return done
 
+    def utilization(self, window: float) -> float:
+        """Fraction of server-time busy over a `window` of simulated seconds."""
+        if window <= 0:
+            return float("nan")
+        return self.busy_time / (window * self.servers)
+
+
+@dataclass
+class OpTally:
+    """Cross-plane operation counters for amortization accounting (DESIGN.md §9).
+
+    Group commit's whole point is fewer metadata proposals and object PUTs
+    *per appended record*; this tally snapshots both planes around a workload
+    so benchmarks report the ratio directly.
+    """
+
+    records: int = 0
+    proposals: int = 0
+    puts: int = 0
+    bytes_put: int = 0
+
+    @classmethod
+    def capture(cls, system, records: int = 0) -> "OpTally":
+        """Snapshot a BoltSystem's counters (records is caller-supplied).
+        Store backends without counters (e.g. FileObjectStore) report 0."""
+        return cls(records=records,
+                   proposals=system.metadata.proposals,
+                   puts=getattr(system.store, "put_count", 0),
+                   bytes_put=getattr(system.store, "bytes_written", 0))
+
+    def delta(self, since: "OpTally") -> "OpTally":
+        return OpTally(records=self.records - since.records,
+                       proposals=self.proposals - since.proposals,
+                       puts=self.puts - since.puts,
+                       bytes_put=self.bytes_put - since.bytes_put)
+
+    @property
+    def proposals_per_record(self) -> float:
+        return self.proposals / max(1, self.records)
+
+    @property
+    def puts_per_record(self) -> float:
+        return self.puts / max(1, self.records)
+
 
 @dataclass
 class ServiceTimes:

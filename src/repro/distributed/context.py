@@ -27,7 +27,8 @@ def use_mesh(mesh: Optional[jax.sharding.Mesh]):
     _ACTIVE_MESH = mesh
     try:
         if mesh is not None:
-            with jax.set_mesh(mesh):
+            from ..launch.mesh import activate_mesh
+            with activate_mesh(mesh):
                 yield mesh
         else:
             yield None

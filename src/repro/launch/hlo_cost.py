@@ -168,6 +168,8 @@ class HloCostModel:
 
     # ------------------------------------------------------------------ cost
     def _operand_shape(self, comp: _Computation, operand: str) -> str:
+        if "[" in operand:
+            return operand   # older HLO prints typed operands: "f32[2,3]{1,0} %x"
         name = operand.lstrip("%")
         return comp.shapes.get(name, "")
 

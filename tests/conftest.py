@@ -1,0 +1,103 @@
+"""Test-environment compatibility shims.
+
+The property-test suite uses `hypothesis`, but the benchmark container cannot
+pip-install extra packages. When the real library is absent we install a tiny
+deterministic fallback into ``sys.modules`` implementing exactly the subset
+the suite uses — ``given``, ``settings``, and the ``integers`` / ``lists`` /
+``tuples`` / ``booleans`` / ``sampled_from`` strategies — as a seeded example
+generator. It has no shrinking and no adaptive search; it simply runs each
+property ``max_examples`` times with reproducible pseudo-random draws (the
+RNG is seeded from the test's qualified name via crc32, so runs are stable
+across processes regardless of PYTHONHASHSEED).
+
+With a real `hypothesis` installed (see requirements.txt) this file is a
+no-op and the full engine is used.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+    def integers(min_value=0, max_value=1 << 16):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: rng.choice(elements))
+
+    def lists(elements, min_size=0, max_size=10, **_kw):
+        def draw(rng):
+            n = rng.randint(min_size, max_size if max_size is not None else min_size + 10)
+            return [elements._draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    def tuples(*elements):
+        return _Strategy(lambda rng: tuple(e._draw(rng) for e in elements))
+
+    def binary(min_size=0, max_size=16):
+        return _Strategy(lambda rng: rng.randbytes(rng.randint(min_size, max_size)))
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, deadline=None, **_kw):
+        def deco(fn):
+            fn._gc_max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*arg_strategies, **kw_strategies):
+        def deco(fn):
+            sig = inspect.signature(fn)
+            params = list(sig.parameters)
+            strategies = dict(kw_strategies)
+            # like hypothesis, positional strategies bind right-to-left
+            for name, strat in zip(params[len(params) - len(arg_strategies):],
+                                   arg_strategies):
+                strategies[name] = strat
+            remaining = [sig.parameters[p] for p in params if p not in strategies]
+            seed = zlib.crc32(f"{fn.__module__}.{fn.__qualname__}".encode())
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                rng = random.Random(seed)
+                # @settings may sit above @given (attribute lands on `wrapper`)
+                # or below it (attribute lands on `fn`) — honor both orders
+                n = getattr(wrapper, "_gc_max_examples",
+                            getattr(fn, "_gc_max_examples", _DEFAULT_MAX_EXAMPLES))
+                for _ in range(n):
+                    drawn = {k: s._draw(rng) for k, s in strategies.items()}
+                    fn(*args, **kwargs, **drawn)
+
+            # hide strategy-bound params so pytest only supplies the rest
+            # (fixtures / parametrize args)
+            wrapper.__signature__ = sig.replace(parameters=remaining)
+            del wrapper.__wrapped__  # pytest must not unwrap to the full signature
+            return wrapper
+        return deco
+
+    hyp = types.ModuleType("hypothesis")
+    st_mod = types.ModuleType("hypothesis.strategies")
+    for _s in (integers, booleans, sampled_from, lists, tuples, binary):
+        setattr(st_mod, _s.__name__, _s)
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = st_mod
+    hyp.HealthCheck = types.SimpleNamespace(too_slow=None, data_too_large=None,
+                                            filter_too_much=None)
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = st_mod

@@ -9,6 +9,8 @@ import pytest
 from repro.configs import ARCHS, get_smoke_config
 from repro.models import decode_step, forward, init_caches, init_params, loss_fn
 
+pytestmark = pytest.mark.slow  # JAX tracing/compilation; fast lane: -m 'not slow'
+
 
 def _batch(cfg, B=2, S=32, key=0):
     rng = np.random.default_rng(key)

@@ -1,0 +1,271 @@
+"""Group-commit append pipeline (DESIGN.md §9).
+
+Covers: multi-log batched proposals and position assignment, flush policies,
+read-your-writes, interaction with promotable cForks (withheld positions and
+deterministic per-entry errors), replay/snapshot determinism of the
+``append_batch_multi`` SMR command, and a property test that group-commit
+append streams are read-equivalent to per-record appends.
+"""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AgileLogError, BoltSystem, ForkBlocked,
+                        GroupCommitConfig)
+from repro.core.metadata import MetadataState
+from repro.core.objectstore import SegmentWriter
+from repro.core.sim import OpTally
+
+REC = lambda tag, i: f"{tag}{i}".encode()  # noqa: E731
+
+
+# ------------------------------------------------------------- segment writer
+def test_segment_writer_merges_per_log_entries():
+    w = SegmentWriter()
+    assert w.add(7, [b"aa", b"b"]) == (0, 0)
+    assert w.add(9, [b"ccc"]) == (1, 0)
+    assert w.add(7, [b"dddd"]) == (0, 2)   # same log merges into entry 0
+    payload, entries = w.finish()
+    assert payload == b"aabcccdddd"
+    assert entries == [(7, (0, 2, 6), (2, 1, 4)), (9, (3,), (3,))]
+    assert w.nrecords == 4 and w.nbytes == 10
+
+
+# ------------------------------------------------- batched proposal mechanics
+def test_multi_log_flush_is_one_proposal_one_put():
+    system = BoltSystem(n_brokers=3, group_commit=GroupCommitConfig(max_records=64))
+    logs = [system.create_log(f"l{i}") for i in range(3)]  # all on broker 0
+    before = OpTally.capture(system)
+    pending = []
+    for i in range(8):
+        for tag, log in zip("abc", logs):
+            pending.append(log.append(REC(tag, i)))
+    system.flush()
+    delta = OpTally.capture(system, records=24).delta(before)
+    assert delta.proposals == 1
+    assert delta.puts == 1
+    for j, tag in enumerate("abc"):
+        positions = [p.result() for p in pending[j::3]]
+        assert positions == [[i] for i in range(8)]
+        assert logs[j].read(0, 8) == [REC(tag, i) for i in range(8)]
+
+
+def test_positions_match_per_call_path():
+    per_call = BoltSystem(n_brokers=2)
+    grouped = BoltSystem(n_brokers=2, group_commit=GroupCommitConfig(max_records=5))
+    a1, b1 = per_call.create_log("a"), per_call.create_log("b")
+    a2, b2 = grouped.create_log("a"), grouped.create_log("b")
+    got, want = [], []
+    for i in range(17):
+        log1, log2 = (a1, a2) if i % 3 else (b1, b2)
+        want.append(log1.append(REC("r", i)))
+        got.append(log2.append(REC("r", i)))
+    grouped.flush()
+    assert [p.result()[0] for p in got] == want
+    for lo, hi in [(a1, a2), (b1, b2)]:
+        assert hi.read(0, hi.tail) == lo.read(0, lo.tail)
+
+
+def test_flush_thresholds_and_context_manager():
+    cfg = GroupCommitConfig(max_records=4, max_bytes=100)
+    with BoltSystem(group_commit=cfg) as system:
+        log = system.create_log("x")
+        p1 = [log.append(b"r") for _ in range(3)]
+        assert not any(p.done for p in p1)          # under both thresholds
+        p2 = log.append(b"r")
+        assert all(p.done for p in p1 + [p2])       # record-count flush
+        p3 = log.append(b"x" * 100)
+        assert p3.done                               # byte flush
+        p4 = log.append(b"tail")
+    assert p4.done                                   # context-exit flush
+    assert p4.result() == [5]
+
+
+def test_read_flushes_staged_records():
+    system = BoltSystem(group_commit=GroupCommitConfig(max_records=1000))
+    log = system.create_log("x")
+    log.append(b"one")
+    log.append(b"two")
+    assert log.read(0, 2) == [b"one", b"two"]   # read-your-writes via flush
+    # reading a log with nothing staged does not flush other logs' records
+    other = system.create_log("y")  # same broker, no staged records
+    pending = log.append(b"three")
+    assert other.read(0, 0) == []
+    assert not pending.done                      # 'three' still staged
+    assert log.read(2, 3) == [b"three"]          # this read flushes it
+
+
+def test_des_time_deadline_flushes_old_batch():
+    cfg = GroupCommitConfig(max_records=1000, max_delay=1e-3)
+    system = BoltSystem(group_commit=cfg)
+    broker = system.brokers[0]
+    log = system.create_log("x")
+    p1 = broker.stage(log.log_id, [b"a"], arrival=0.0)
+    p2 = broker.stage(log.log_id, [b"b"], arrival=0.5e-3)
+    assert not p1.done and not p2.done
+    p3 = broker.stage(log.log_id, [b"c"], arrival=2e-3)  # > max_delay later
+    assert p1.done and p2.done and not p3.done
+    assert p1.result() == [0] and p2.result() == [1]
+    broker.flush()
+    assert p3.result() == [2]
+
+
+def test_pending_result_forces_flush():
+    system = BoltSystem(group_commit=GroupCommitConfig(max_records=1000))
+    log = system.create_log("x")
+    pending = log.append(b"r")
+    assert not pending.done
+    assert pending.result() == [0]   # result() flushes the owning broker
+    assert pending.done
+
+
+def test_metadata_ops_flush_staged_records():
+    """Read-your-writes across planes: tail/fork/promote observe staged appends."""
+    system = BoltSystem(group_commit=GroupCommitConfig(max_records=100))
+    log = system.create_log("x")
+    p = log.append(b"a")
+    assert log.tail == 1 and p.done          # tail read flushed the staging
+    log.append(b"b")
+    fork = log.sfork()                       # fork point includes the staged record
+    assert fork.read(0, fork.tail) == [b"a", b"b"]
+
+
+def test_failed_broker_discards_staging():
+    system = BoltSystem(group_commit=GroupCommitConfig(max_records=100))
+    log = system.create_log("x")
+    p = log.append(b"lost")
+    system.fail_broker(0)
+    with pytest.raises(AgileLogError):
+        p.result()                           # never acked -> failed, not committed
+    system.flush()
+    assert system.metadata.state.tail(log.log_id) == 0
+
+
+def test_flush_failure_fails_pendings_and_recovers():
+    """A flush losing metadata quorum must FAIL its pendings (not strand them
+    as None == 'withheld'), and a retry after recovery must commit cleanly."""
+    system = BoltSystem(group_commit=GroupCommitConfig(max_records=100),
+                        n_meta_replicas=3)
+    log = system.create_log("x")
+    p = log.append(b"r")
+    system.metadata.fail_replica(1)
+    system.metadata.fail_replica(2)
+    with pytest.raises(RuntimeError):
+        system.flush()
+    with pytest.raises(AgileLogError):
+        p.result()
+    system.metadata.recover_replica(1)
+    p2 = log.append(b"r")
+    system.flush()
+    assert p2.result() == [0]           # nothing from the failed flush leaked
+    assert log.tail == 1
+    assert system.metadata.check_convergence()
+
+
+def test_group_commit_config_validation():
+    assert BoltSystem(group_commit=0).group_commit is None     # falsy: off
+    assert BoltSystem(group_commit=False).group_commit is None
+    assert BoltSystem(group_commit=True).group_commit is not None
+    with pytest.raises(ValueError):
+        BoltSystem(group_commit=-3)
+    with pytest.raises(TypeError):
+        BoltSystem(group_commit=0.5)
+
+
+# ------------------------------------------------ promotable-cFork interaction
+def test_batch_withholds_positions_under_promotable_cfork():
+    system = BoltSystem(group_commit=GroupCommitConfig(max_records=64))
+    root = system.create_log("root")
+    root.append(b"base")
+    system.flush()
+    child = root.cfork(promotable=True)
+    p = root.append(b"hidden")
+    system.flush()
+    assert p.result() is None                    # §4.1: withheld, not lost
+    assert root.tail == 2
+    child.promote()
+    assert root.read(0, 2) == [b"base", b"hidden"]
+
+
+def test_batch_entry_errors_are_isolated_and_deterministic():
+    """A blocked log's entry fails its own appenders; batch-mates commit."""
+    system = BoltSystem(group_commit=GroupCommitConfig(max_records=64))
+    root = system.create_log("root")
+    free = system.create_log("free")
+    root.append(b"base")
+    system.flush()
+    sibling = root.cfork()            # ordinary fork of root...
+    root.cfork(promotable=True)       # ...now blocked by the ancestor's hold
+    p_blocked = sibling.append(b"nope")
+    p_free = free.append(b"yep")
+    system.flush()
+    assert p_free.result() == [0]
+    with pytest.raises(ForkBlocked):
+        p_blocked.result()
+    # every replica applied the partial batch identically
+    assert system.metadata.check_convergence()
+
+
+# ------------------------------------------------- replay / snapshot determinism
+def test_append_batch_multi_replays_deterministically_from_snapshot():
+    system = BoltSystem(n_brokers=2, n_meta_replicas=3, snapshot_every=3,
+                        group_commit=GroupCommitConfig(max_records=8))
+    a = system.create_log("a")
+    b = system.create_log("b")
+    for i in range(20):
+        (a if i % 2 else b).append(REC("r", i))
+    system.flush()
+    # crash + recover a follower from a snapshot + suffix replay
+    follower = next(r.rid for r in system.metadata.replicas
+                    if r.rid != system.metadata.leader_id)
+    system.metadata.fail_replica(follower)
+    for i in range(20, 31):
+        (a if i % 2 else b).append(REC("r", i))
+    system.flush()
+    system.metadata.recover_replica(follower)
+    assert system.metadata.check_convergence()
+    # kill the leader: the new leader's state must serve identical reads
+    want_a = a.read(0, a.tail)
+    system.metadata.fail_replica(system.metadata.leader_id)
+    assert a.read(0, a.tail) == want_a
+    assert system.metadata.check_convergence()
+
+
+def test_apply_append_batch_multi_outcomes_shape():
+    state = MetadataState()
+    rid = state.apply(("create_root", "r"))
+    outcomes = state.apply(("append_batch_multi", (
+        (rid, "obj", (0, 3), (3, 3)),
+        (999, "obj", (6,), (3,)),          # unknown log -> error outcome
+    )))
+    assert outcomes[0] == ("ok", [0, 1])
+    assert outcomes[1][0] == "error" and outcomes[1][1] == "UnknownLog"
+    assert state.tails.get(rid)[0] == 2    # the bad entry changed nothing else
+
+
+# ---------------------------------------------------------------- property test
+@given(trace=st.lists(st.tuples(st.integers(0, 2),      # which log
+                                st.integers(1, 4),      # how many records
+                                st.integers(0, 4)),     # flush when 0
+                      min_size=1, max_size=60))
+@settings(max_examples=30, deadline=None)
+def test_group_commit_read_equivalent_to_per_record(trace):
+    per_call = BoltSystem(n_brokers=2)
+    grouped = BoltSystem(n_brokers=2, group_commit=GroupCommitConfig(max_records=7))
+    logs1 = [per_call.create_log(f"l{i}") for i in range(3)]
+    logs2 = [grouped.create_log(f"l{i}") for i in range(3)]
+    counter = 0
+    for which, k, flush_roll in trace:
+        records = [REC("t", counter + j) for j in range(k)]
+        counter += k
+        want = logs1[which].append_batch(records)
+        pending = logs2[which].append_batch(records)
+        if flush_roll == 0:
+            grouped.flush()
+            assert pending.result() == want
+    grouped.flush()
+    for l1, l2 in zip(logs1, logs2):
+        assert l1.tail == l2.tail
+        assert l2.read(0, l2.tail) == l1.read(0, l1.tail)
+    assert grouped.metadata.proposals <= per_call.metadata.proposals
+    assert grouped.store.put_count <= per_call.store.put_count

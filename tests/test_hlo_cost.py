@@ -6,6 +6,8 @@ import pytest
 
 from repro.launch.hlo_cost import analyze
 
+pytestmark = pytest.mark.slow  # JAX tracing/compilation; fast lane: -m 'not slow'
+
 
 def _cost(fn, *args):
     txt = jax.jit(fn).lower(*args).compile().as_text()
@@ -65,8 +67,8 @@ def test_grad_of_scan():
 
 
 def test_collectives_counted_with_trips():
-    mesh = jax.make_mesh((len(jax.devices()),), ("model",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import activate_mesh, make_mesh
+    mesh = make_mesh((len(jax.devices()),), ("model",))
     from jax.sharding import NamedSharding, PartitionSpec as P
     n = len(jax.devices())
     xs = jax.ShapeDtypeStruct((8, 64 * n), jnp.float32,
@@ -77,7 +79,7 @@ def test_collectives_counted_with_trips():
             return cr + jnp.sum(x, axis=1, keepdims=True), None  # all-reduce
         out, _ = jax.lax.scan(body, jnp.zeros((8, 1)), None, length=5)
         return out
-    with jax.set_mesh(mesh):
+    with activate_mesh(mesh):
         txt = jax.jit(fn).lower(xs).compile().as_text()
     c = analyze(txt)
     if n > 1:

@@ -9,6 +9,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.index import RunIndex
 from repro.distributed.sharding import param_shardings, zero_extend
+from repro.launch.mesh import make_mesh
 
 
 # ------------------------------------------------------------------ RunIndex
@@ -65,8 +66,7 @@ def test_runindex_snapshot_shares_runs():
 @pytest.fixture(scope="module")
 def mesh():
     n = len(jax.devices())
-    return jax.make_mesh((1, 1, n), ("pod", "data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return make_mesh((1, 1, n), ("pod", "data", "model"))
 
 
 def test_param_rules_divisibility_fallback(mesh):
@@ -95,7 +95,6 @@ def test_zero_extend_on_wide_mesh():
     devs = len(jax.devices())
     if devs < 2:
         pytest.skip("needs >1 device")
-    m = jax.make_mesh((devs, 1), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    m = make_mesh((devs, 1), ("data", "model"))
     spec = zero_extend(P(None, None), (devs * 4, 8), m)
     assert spec[0] == "data"

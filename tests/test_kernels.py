@@ -9,6 +9,8 @@ from repro.kernels.flash_attention import flash_attention
 from repro.kernels.mlstm_chunk import mlstm_chunk
 from repro.kernels.ref import flash_attention_ref, mlstm_ref
 
+pytestmark = pytest.mark.slow  # JAX tracing/compilation; fast lane: -m 'not slow'
+
 
 def _rand(rng, shape, dtype):
     return jnp.asarray(rng.normal(size=shape), dtype)

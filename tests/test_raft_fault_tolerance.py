@@ -43,6 +43,21 @@ def test_no_quorum_rejects_writes():
         sys.metadata.fail_replica(sys.metadata.leader_id)  # second failure: no quorum
 
 
+def test_no_quorum_proposal_rolls_back_and_recovers():
+    """A rejected (no-quorum) proposal must leave NO trace in minority logs:
+    after recovery, later proposals commit at consistent indices."""
+    sys = BoltSystem(n_brokers=2, n_meta_replicas=3)
+    log = sys.create_log("root")
+    sys.metadata.fail_replica(1)
+    sys.metadata.fail_replica(2)
+    with pytest.raises(RuntimeError):
+        log.append(b"never-committed")
+    sys.metadata.recover_replica(1)
+    assert log.append(b"first-real") == 0
+    assert log.read(0, 1) == [b"first-real"]
+    assert sys.metadata.check_convergence()
+
+
 def test_replica_recovery_from_snapshot():
     sys = BoltSystem(n_brokers=2, snapshot_every=10)
     log = sys.create_log("root")
