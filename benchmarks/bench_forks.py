@@ -90,9 +90,13 @@ def bench_promote() -> List[Row]:
 
 
 def bench_lookup_depth() -> List[Row]:
-    """Fig 10: recursive HLI lookup latency vs cFork nesting depth."""
+    """Fig 10: recursive HLI lookup latency vs cFork nesting depth.
+
+    The flattened-view cache is disabled here on purpose — this figure
+    measures the paper's recursive resolver; `bench_read` (DESIGN.md §10)
+    measures cached-vs-uncached side by side."""
     rows: List[Row] = []
-    state = MetadataState()
+    state = MetadataState(view_cache=False)
     root = state.apply(("create_root", "r"))
     per_level = 20_000
     batch = 512

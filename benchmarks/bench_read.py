@@ -1,0 +1,144 @@
+"""Read-path benchmarks (DESIGN.md §10): the scan-oriented read plane.
+
+Five families:
+
+* ``read/lookup``       — Fig 10 revisited: single-position lookup latency vs
+                          cFork nesting depth, with and without the
+                          flattened-view cache (acceptance: >=5x at depth>=5).
+* ``read/single_record``— byte amplification of a 1-record read out of a
+                          ~1 MB group-commit segment: page-granular cache vs
+                          the seed's whole-object fill.
+* ``read/scan``         — cold/warm streaming scan throughput via
+                          ``AgileLog.scan`` (scatter-gather + readahead).
+* ``read/record_size``  — cold-scan throughput across record sizes.
+* ``read/catchup``      — the agent-first pattern: a fresh cFork (cold broker
+                          cache) bulk-reads its parent's history.
+
+Quick mode for CI smoke runs: ``BENCH_QUICK=1`` shrinks sizes ~8x.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import List
+
+from repro.core import BoltSystem
+from repro.core.broker import GroupCommitConfig
+from repro.core.metadata import MetadataState
+
+from .common import Row, timeit
+
+QUICK = os.environ.get("BENCH_QUICK", "") not in ("", "0")
+
+
+def _deep_state(view_cache: bool, levels: int, per_level: int, batch: int = 512):
+    """A `levels`-deep cFork chain, `per_level` records appended per level."""
+    state = MetadataState(view_cache=view_cache)
+    log_id = state.apply(("create_root", "r"))
+    for depth in range(1, levels + 1):
+        for start in range(0, per_level, batch):
+            k = min(batch, per_level - start)
+            state.apply(("append", log_id, f"o{depth}-{start}",
+                         tuple(range(0, k * 8, 8)), tuple([8] * k)))
+        log_id = state.apply(("cfork", log_id, False))
+    return state, log_id
+
+
+def _fill(system: BoltSystem, name: str, n_records: int, record: bytes,
+          batch: int = 256):
+    log = system.create_log(name)
+    for start in range(0, n_records, batch):
+        log.append_batch([record] * min(batch, n_records - start))
+    system.flush()
+    return log
+
+
+def bench_read() -> List[Row]:
+    rows: List[Row] = []
+    levels = 7
+    per_level = 2_500 if QUICK else 20_000
+    n_calls = 500 if QUICK else 2_000
+
+    # -- lookup vs depth: cached vs uncached resolver -----------------------
+    lookup = {}
+    for cached, tag in ((False, "uncached"), (True, "cached")):
+        state, deepest = _deep_state(cached, levels, per_level)
+        for depth_hit in (1, 3, 5, 7):
+            pos = (levels - depth_hit) * per_level + per_level // 2
+            us = timeit(lambda: state.read_spans(deepest, pos, pos + 1),
+                        n=n_calls)
+            lookup[(tag, depth_hit)] = us
+            rows.append((f"read/lookup/{tag}/depth={depth_hit}", us,
+                         "flattened-view cache" if cached else "chain walk"))
+    for d in (5, 7):
+        ratio = lookup[("uncached", d)] / lookup[("cached", d)]
+        rows.append((f"read/lookup/speedup/depth={d}", ratio,
+                     f"{ratio:.1f}x faster cached (acceptance >=5x)"))
+
+    # -- single-record read out of a ~1MB segment: bytes fetched ------------
+    seg_records = 64 if QUICK else 256
+    rec4k = b"s" * 4096
+    sys_ = BoltSystem(
+        group_commit=GroupCommitConfig(max_records=seg_records,
+                                       max_bytes=8 << 20),
+        cache_page_bytes=64 << 10, readahead_bytes=0)
+    log = _fill(sys_, "seg", seg_records * 4, rec4k, batch=seg_records)
+    seg_bytes = seg_records * len(rec4k)
+    broker = log.broker
+    b0 = broker.cache.bytes_fetched
+    assert log.read(seg_records + 3, seg_records + 4) == [rec4k]
+    fetched = broker.cache.bytes_fetched - b0
+    rows.append(("read/single_record/bytes_fetched", float(fetched),
+                 f"page-granular; whole-object fill = {seg_bytes} B "
+                 f"({seg_bytes / max(1, fetched):.0f}x more)"))
+
+    # -- cold/warm scan throughput ------------------------------------------
+    n_records = 8_192 if QUICK else 65_536
+    rec = b"x" * 256
+    sys_ = BoltSystem(group_commit=GroupCommitConfig(max_records=256,
+                                                     max_bytes=1 << 20))
+    log = _fill(sys_, "scan", n_records, rec)
+    total_mb = n_records * len(rec) / 1e6
+    t0 = time.perf_counter()
+    n = sum(1 for _ in log.scan(batch=1024))
+    cold = time.perf_counter() - t0
+    assert n == n_records
+    t0 = time.perf_counter()
+    for _ in log.scan(batch=1024):
+        pass
+    warm = time.perf_counter() - t0
+    rows.append(("read/scan/cold", cold / n_records * 1e6,
+                 f"{total_mb / cold:.0f} MB/s ({n_records} x 256B)"))
+    rows.append(("read/scan/warm", warm / n_records * 1e6,
+                 f"{total_mb / warm:.0f} MB/s ({cold / warm:.1f}x of cold)"))
+
+    # -- record-size sweep (cold scans) -------------------------------------
+    total_bytes = (2 << 20) if QUICK else (16 << 20)
+    for size in (256, 4096, 65536):
+        k = max(1, total_bytes // size)
+        sys_ = BoltSystem(group_commit=GroupCommitConfig(max_records=256,
+                                                         max_bytes=4 << 20))
+        log = _fill(sys_, f"sz{size}", k, b"r" * size,
+                    batch=min(256, max(1, (1 << 20) // size)))
+        t0 = time.perf_counter()
+        n = sum(1 for _ in log.scan(batch=max(64, 4096 // (size // 256 + 1))))
+        dt = time.perf_counter() - t0
+        assert n == k
+        rows.append((f"read/record_size/{size}B", dt / k * 1e6,
+                     f"{k * size / 1e6 / dt:.0f} MB/s cold"))
+
+    # -- agent catch-up: fresh cFork bulk-reads parent history --------------
+    sys_ = BoltSystem(group_commit=GroupCommitConfig(max_records=256,
+                                                     max_bytes=1 << 20))
+    root = _fill(sys_, "hist", n_records, rec)
+    agent = root.cfork()          # different broker => cold object cache
+    t0 = time.perf_counter()
+    n = sum(1 for _ in agent.scan(batch=1024))
+    dt = time.perf_counter() - t0
+    assert n == n_records
+    rows.append(("read/catchup/cfork_cold", dt / n_records * 1e6,
+                 f"{n_records * len(rec) / 1e6 / dt:.0f} MB/s "
+                 f"(broker {agent.broker.broker_id}, parent on "
+                 f"{root.broker.broker_id})"))
+    return rows

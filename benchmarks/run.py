@@ -22,6 +22,7 @@ from .bench_forks import (bench_fork_impact, bench_fork_latency,
                           bench_promote)
 from .bench_isolation import bench_isolation
 from .bench_pipeline import bench_pipeline
+from .bench_read import bench_read
 from .bench_roofline import bench_roofline
 
 ALL = [
@@ -35,6 +36,7 @@ ALL = [
     ("mem65_metadata_memory", bench_metadata_memory),
     ("fig12_14_agents", bench_agents),
     ("append_group_commit", bench_append),
+    ("read_path", bench_read),
     ("data_pipeline", bench_pipeline),
     ("roofline", bench_roofline),
 ]

@@ -27,7 +27,7 @@ first, so read-your-writes is preserved. Default-off callers are unchanged.
 
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Dict, Iterator, List, Optional, Sequence, Union
 
 from .broker import Broker, GroupCommitConfig, PendingAppend
 from .errors import InvalidOperation
@@ -40,7 +40,11 @@ class BoltSystem:
                  n_meta_replicas: int = 3, snapshot_every: int = 0,
                  cf_mode: str = "ltt", fork_mode: str = "zerocopy",
                  promote_mode: str = "copy",
-                 group_commit: Union[None, bool, int, GroupCommitConfig] = None) -> None:
+                 group_commit: Union[None, bool, int, GroupCommitConfig] = None,
+                 cache_bytes: int = 64 << 20,
+                 cache_page_bytes: int = 64 << 10,
+                 readahead_bytes: int = 256 << 10,
+                 view_cache: bool = True) -> None:
         if group_commit is True:
             group_commit = GroupCommitConfig()
         elif group_commit is False or group_commit == 0:
@@ -56,8 +60,12 @@ class BoltSystem:
         self.store = store if store is not None else MemoryObjectStore()
         self.metadata = MetadataService(
             n_replicas=n_meta_replicas, snapshot_every=snapshot_every,
-            cf_mode=cf_mode, fork_mode=fork_mode, promote_mode=promote_mode)
+            cf_mode=cf_mode, fork_mode=fork_mode, promote_mode=promote_mode,
+            view_cache=view_cache)
         self.brokers = [Broker(i, self.store, self.metadata,
+                               cache_bytes=cache_bytes,
+                               cache_page_bytes=cache_page_bytes,
+                               readahead_bytes=readahead_bytes,
                                group_commit=group_commit)
                         for i in range(max(2, n_brokers))]
         self._fork_broker: Dict[int, int] = {}   # parent log -> broker for its forks
@@ -83,20 +91,33 @@ class BoltSystem:
     def _broker_for_root(self) -> Broker:
         return self.brokers[0]
 
+    def _pick_fork_broker(self, parent_broker: int) -> int:
+        """Next round-robin broker that is NOT the parent's and is live.
+
+        The seed's re-map ``(b % (len-1)) + 1`` could land back on
+        ``parent_broker`` (e.g. 2 brokers, parent on broker 1), silently
+        violating the isolation placement rule — so after the round-robin
+        pass, fall back to an explicit search over every other live broker
+        (including broker 0) before giving up and co-locating."""
+        n = len(self.brokers)
+        dead = getattr(self, "_dead", set())
+        for _ in range(max(1, n - 1)):
+            b = self._next_broker
+            self._next_broker = (self._next_broker % (n - 1)) + 1
+            if b != parent_broker and b not in dead:
+                return b
+        for b in range(n):
+            if b != parent_broker and b not in dead:
+                return b
+        return parent_broker   # degenerate: no other live broker exists
+
     def _broker_for_fork(self, parent_log: int, parent_broker: int,
                          dedicated: bool) -> Broker:
         if dedicated:
-            b = self._next_broker
-            self._next_broker = (self._next_broker % (len(self.brokers) - 1)) + 1
-            if b == parent_broker:
-                b = (b % (len(self.brokers) - 1)) + 1
-            return self.brokers[b]
+            return self.brokers[self._pick_fork_broker(parent_broker)]
         b = self._fork_broker.get(parent_log)
         if b is None or b == parent_broker:
-            b = self._next_broker
-            self._next_broker = (self._next_broker % (len(self.brokers) - 1)) + 1
-            if b == parent_broker:
-                b = (b % (len(self.brokers) - 1)) + 1
+            b = self._pick_fork_broker(parent_broker)
             self._fork_broker[parent_log] = b
         return self.brokers[b]
 
@@ -174,7 +195,39 @@ class AgileLog:
         self._b().flush()
 
     def read(self, lo: int, hi: int) -> List[bytes]:
-        return self._b().read_records(self.log_id, lo, hi)
+        records, _ = self._b().read_records(self.log_id, lo, hi)
+        return records
+
+    def scan(self, lo: int = 0, hi: Optional[int] = None,
+             batch: int = 1024) -> Iterator[bytes]:
+        """Stream records [lo, hi) in position order (DESIGN.md §10).
+
+        The agent catch-up pattern: one metadata resolution + one
+        scatter-gather ranged-GET round per ``batch`` positions, with the
+        broker cache's sequential readahead prefetching ahead of the cursor —
+        instead of a chain walk and a GET per record. ``hi=None`` snapshots
+        the visible tail when ``scan`` is called; records appended afterwards
+        are not included. Validation is eager (this returns a generator, but
+        bad ``batch``/bounds raise here, at the call site, exactly as
+        ``read`` would)."""
+        if batch <= 0:
+            raise InvalidOperation(f"scan batch must be positive, got {batch}")
+        self._sync()
+        state = self.system.metadata.state
+        if hi is None:
+            hi = state.visible_tail(self.log_id)
+        tail = state.tail(self.log_id)
+        if not (0 <= lo <= hi <= tail):
+            raise InvalidOperation(f"scan [{lo},{hi}) out of range (tail {tail})")
+        return self._scan_iter(lo, hi, batch)
+
+    def _scan_iter(self, lo: int, hi: int, batch: int) -> Iterator[bytes]:
+        pos = lo
+        while pos < hi:
+            chunk_hi = min(pos + batch, hi)
+            records, _ = self._b().read_records(self.log_id, pos, chunk_hi)
+            yield from records
+            pos = chunk_hi
 
     @property
     def tail(self) -> int:

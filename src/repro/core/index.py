@@ -51,26 +51,37 @@ class Run:
         return self.lcum_start + self.n
 
     def span(self, i: int, j: Optional[int] = None) -> List[Span]:
-        """Byte spans for records [i, j) within this run (run-relative)."""
+        """Byte spans for records [i, j) within this run (run-relative),
+        coalescing contiguous byte ranges into one span (fewer GETs).
+        Vectorized: group boundaries come from one numpy comparison instead of
+        a per-record Python loop (DESIGN.md §10)."""
         j = self.n if j is None else j
-        out: List[Span] = []
-        k = i
-        while k < j:
-            # coalesce contiguous byte ranges into one span (fewer GETs)
-            off = int(self.offsets[k])
-            ln = int(self.lengths[k])
-            m = k + 1
-            while m < j and int(self.offsets[m]) == off + ln:
-                ln += int(self.lengths[m])
-                m += 1
-            out.append((self.object_id, off, ln))
-            k = m
-        return out
+        if j <= i:
+            return []
+        if j - i == 1:
+            return [(self.object_id, int(self.offsets[i]), int(self.lengths[i]))]
+        offs = self.offsets[i:j]
+        lens = self.lengths[i:j]
+        # a new span starts wherever a record is not byte-adjacent to its
+        # predecessor: offs[k] != offs[k-1] + lens[k-1]
+        breaks = np.flatnonzero(offs[1:] != offs[:-1] + lens[:-1]) + 1
+        starts = np.empty(len(breaks) + 1, dtype=np.int64)
+        starts[0] = 0
+        starts[1:] = breaks
+        ends = np.empty_like(starts)
+        ends[:-1] = breaks
+        ends[-1] = j - i
+        cum = np.zeros(len(lens) + 1, dtype=np.int64)
+        np.cumsum(lens, out=cum[1:])
+        obj = self.object_id
+        return [(obj, o, ln) for o, ln in zip(offs[starts].tolist(),
+                                              (cum[ends] - cum[starts]).tolist())]
 
     def record_spans(self, i: int, j: Optional[int] = None) -> List[Span]:
         j = self.n if j is None else j
-        return [(self.object_id, int(self.offsets[k]), int(self.lengths[k]))
-                for k in range(i, j)]
+        obj = self.object_id
+        return [(obj, o, ln) for o, ln in zip(self.offsets[i:j].tolist(),
+                                              self.lengths[i:j].tolist())]
 
     def nbytes(self) -> int:
         return (sys.getsizeof(self.start) * 3 + len(self.object_id)

@@ -31,6 +31,7 @@ validate), and every other descendant's appends/deep reads are blocked.
 
 from __future__ import annotations
 
+import bisect
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple
 
@@ -62,11 +63,30 @@ class LogMeta:
         return self.kind != "frozen"
 
 
+class _FlatView:
+    """Memoized flattened resolution of one log's view (DESIGN.md §10).
+
+    ``entries`` is a position-contiguous list of ``(c_lo, c_hi, run, rel0)``:
+    positions ``[c_lo, c_hi)`` of the viewing log resolve into ancestor index
+    run ``run`` at run-relative record ``rel0 + (pos - c_lo)``. A lookup is a
+    bisect over ``los`` plus a numpy slice of the run — O(log runs), never a
+    chain walk. Views are built lazily (extended to the highest position read
+    so far, ``hi``) and invalidated wholesale on structural mutations."""
+
+    __slots__ = ("version", "hi", "los", "entries")
+
+    def __init__(self, version: int) -> None:
+        self.version = version
+        self.hi = 0
+        self.los: List[int] = []
+        self.entries: List[Tuple[int, int, object, int]] = []
+
+
 class MetadataState:
     """Deterministic state machine. `apply(cmd)` for writes, plain methods for reads."""
 
     def __init__(self, cf_mode: str = "ltt", fork_mode: str = "zerocopy",
-                 promote_mode: str = "copy") -> None:
+                 promote_mode: str = "copy", view_cache: bool = True) -> None:
         assert cf_mode in ("ltt", "eager", "naive")
         assert fork_mode in ("zerocopy", "metacopy")
         assert promote_mode in ("copy", "splice")
@@ -81,6 +101,22 @@ class MetadataState:
             self.tails = EagerTailMap()
         # naive/metacopy variants use per-record NaiveIndex
         self._use_naive_index = cf_mode == "naive" or fork_mode == "metacopy"
+        # -- read path (DESIGN.md §10) -------------------------------------
+        # Flattened-view cache: per-log memoized (ancestor run, shift) tables.
+        # Only engaged while NO log holds an active promotable cFork
+        # (`_holders` empty): with zero holds the §4.1 blocking checks cannot
+        # fire anywhere, so the checks-free flattened lookup is exact.
+        self.view_cache = view_cache and not self._use_naive_index
+        self.structure_version = 0
+        self._views: Dict[int, _FlatView] = {}
+        self._holders: Set[int] = set()   # log ids with >=1 promotable fork
+
+    def __getstate__(self) -> dict:
+        # Raft snapshots pickle the whole state machine; the view cache is
+        # derived data (and may be large), so it is dropped and rebuilt lazily.
+        d = self.__dict__.copy()
+        d["_views"] = {}
+        return d
 
     # ------------------------------------------------------------------ utils
     def _new_index(self):
@@ -103,6 +139,22 @@ class MetadataState:
         _tail, blocked = self.tails.get(meta.log_id)
         own = 1 if self._holds(meta) else 0
         return blocked - own > 0
+
+    def _sync_holder(self, meta: LogMeta) -> None:
+        """Keep the active-holders set consistent after a promotable_forks
+        mutation (the flattened-view fast path keys off `_holders` emptiness)."""
+        if meta.promotable_forks:
+            self._holders.add(meta.log_id)
+        else:
+            self._holders.discard(meta.log_id)
+
+    def _invalidate_views(self) -> None:
+        """Structural mutation (promote/squash/freeze/GC): every flattened
+        view may now resolve through a rewritten index or rebound HLI edge,
+        so the whole cache is dropped (views rebuild lazily on next read)."""
+        self.structure_version += 1
+        if self._views:
+            self._views.clear()
 
     # --------------------------------------------------------------- commands
     def apply(self, cmd: Tuple) -> object:
@@ -206,6 +258,7 @@ class MetadataState:
                 self.tails.range_add(parent_id, d_blocked=+1)  # now incl. child
             self.tails.range_add(child_id, d_blocked=-1)       # child exempt
             parent.promotable_forks[child_id] = fp
+            self._holders.add(parent_id)
         return child_id
 
     def _apply_sfork(self, parent_id: int, past: Optional[int]) -> int:
@@ -249,6 +302,7 @@ class MetadataState:
                     changed = True
         for d in removed:
             meta = self.logs[d]
+            self._holders.discard(d)
             if d in keep:
                 meta.kind = "frozen"   # index kept alive for dependents
                 meta.promotable_forks.clear()
@@ -267,6 +321,7 @@ class MetadataState:
             for lid in [k for k, v in self.logs.items()
                         if v.kind == "frozen" and not v.hli_children]:
                 meta = self.logs.pop(lid)
+                self._holders.discard(lid)
                 if meta.parent is not None and meta.parent in self.logs:
                     self.logs[meta.parent].hli_children.discard(lid)
                 progressed = True
@@ -275,11 +330,13 @@ class MetadataState:
         meta = self._get(log_id)
         if meta.kind == "root":
             raise InvalidOperation("cannot squash the root log (§4.1)")
+        self._invalidate_views()
         parent = self.logs.get(meta.ltt_parent) if meta.ltt_parent is not None else None
         was_promotable = (parent is not None and log_id in parent.promotable_forks)
         removed = self.tails.remove_subtree(log_id)
         if was_promotable:
             del parent.promotable_forks[log_id]
+            self._sync_holder(parent)
             if not parent.promotable_forks:
                 self.tails.range_add(parent.log_id, d_blocked=-1)
         self._delete_or_freeze(removed)
@@ -299,6 +356,7 @@ class MetadataState:
             raise ForkBlocked(
                 "cannot promote into a log blocked by an ancestor's promotable cFork")
         assert child_id in parent.promotable_forks
+        self._invalidate_views()
         # 1. first promote wins: squash other promotable siblings (§4.1)
         for sib in [c for c in parent.promotable_forks if c != child_id]:
             self._apply_squash(sib)
@@ -324,6 +382,7 @@ class MetadataState:
         else:
             self.tails.range_add(child_id, d_blocked=+1)
             self.tails.range_add(parent.log_id, d_blocked=-1)
+        self._sync_holder(parent)
         # 4. index restructure
         if mode == "splice":
             self._promote_splice(parent, child)
@@ -342,6 +401,7 @@ class MetadataState:
             self.logs[child.parent].hli_children.discard(child_id)
         parent.hli_children.discard(child_id)
         del self.logs[child_id]
+        self._holders.discard(child_id)
         self._gc_frozen()
         return True
 
@@ -490,13 +550,32 @@ class MetadataState:
 
     def read_spans(self, log_id: int, lo: int, hi: int,
                    _skip_checks: bool = False, per_record: bool = False) -> List[Span]:
-        """Resolve [lo, hi) to byte spans, recursing through the HLI chain.
+        """Resolve [lo, hi) to byte spans through the HLI chain.
         Contiguous byte ranges are coalesced unless ``per_record``.
+
+        Fast path (DESIGN.md §10): while no log holds an active promotable
+        cFork, positions resolve through the memoized flattened view —
+        O(log runs) per lookup regardless of fork depth. With any hold active
+        the exact per-edge §4.1 blocking checks apply, via the iterative
+        chain resolver.
 
         Raises ForkBlocked if the range crosses an active promotable fork point
         that the reader is not entitled to see (§4.1).
         """
         meta = self._get(log_id)
+        if self.view_cache and not self._holders:
+            view = self._views.get(log_id)
+            if view is not None and view.version != self.structure_version:
+                view = None   # belt-and-braces vs the wholesale clear()
+            if view is None or hi > view.hi:
+                tail = self.tails.get(log_id)[0]
+                if not (0 <= lo <= hi <= tail):
+                    raise InvalidOperation(
+                        f"read [{lo},{hi}) out of range (tail {tail})")
+                view = self._view_for(meta, hi)
+            elif not (0 <= lo <= hi):
+                raise InvalidOperation(f"read [{lo},{hi}) out of range")
+            return self._view_spans(view, lo, hi, per_record)
         tail = self.tails.get(log_id)[0]
         if not (0 <= lo <= hi <= tail):
             raise InvalidOperation(f"read [{lo},{hi}) out of range (tail {tail})")
@@ -515,50 +594,156 @@ class MetadataState:
                       per_record=per_record)
         return out
 
+    # -- flattened-view fast path (DESIGN.md §10) ---------------------------
+    def _view_for(self, meta: LogMeta, hi: int) -> _FlatView:
+        """The log's flattened view, lazily extended to cover [0, hi)."""
+        view = self._views.get(meta.log_id)
+        if view is None or view.version != self.structure_version:
+            view = self._views[meta.log_id] = _FlatView(self.structure_version)
+        if hi > view.hi:
+            new = self._flatten_range(meta, view.hi, hi)
+            # extension seam: if the first new entry continues the last
+            # entry's run, merge them so span coalescing granularity is
+            # identical to a from-scratch resolution
+            if new and view.entries:
+                c_lo, c_hi, run, rel0 = new[0]
+                p_lo, p_hi, p_run, p_rel0 = view.entries[-1]
+                if p_run is run and p_hi == c_lo and p_rel0 + (p_hi - p_lo) == rel0:
+                    view.entries[-1] = (p_lo, c_hi, run, p_rel0)
+                    new = new[1:]
+            for entry in new:
+                view.los.append(entry[0])
+                view.entries.append(entry)
+            view.hi = hi
+        return view
+
+    def _flatten_range(self, meta: LogMeta, lo: int, hi: int
+                       ) -> List[Tuple[int, int, object, int]]:
+        """Resolve [lo, hi) of `meta` (viewer coordinates) into position-
+        contiguous ``(c_lo, c_hi, run, rel0)`` entries, iteratively. `shift`
+        is viewer_pos - current_log_pos along the chain walk."""
+        out: List[Tuple[int, int, object, int]] = []
+        stack: List[Tuple] = [("log", meta, lo, hi, 0)]
+        while stack:
+            item = stack.pop()
+            if item[0] == "emit":
+                out.append(item[1])
+                continue
+            _, m, a, b, shift = item
+            if a >= b:
+                continue
+            pushes: List[Tuple] = []
+            for seg in m.index.segments(a, b):
+                if seg[0] == "local":
+                    _, s_lo, s_hi, run = seg
+                    c_lo = s_lo + shift
+                    pushes.append(("emit", (c_lo, c_lo + (s_hi - s_lo), run,
+                                            s_lo - run.start)))
+                else:
+                    _, g_lo, g_hi, lcount = seg
+                    parent = self.logs.get(m.parent, None)
+                    if parent is None:
+                        raise UnknownLog(
+                            f"positions [{g_lo},{g_hi}) unresolvable in log {m.log_id}")
+                    pushes.append(("log", parent, g_lo - lcount, g_hi - lcount,
+                                   shift + lcount))
+            # LIFO stack + reversed pushes = emits arrive in position order
+            stack.extend(reversed(pushes))
+        return out
+
+    def _view_spans(self, view: _FlatView, lo: int, hi: int,
+                    per_record: bool) -> List[Span]:
+        if lo >= hi:
+            return []
+        out: List[Span] = []
+        entries = view.entries
+        i = bisect.bisect_right(view.los, lo) - 1
+        pos = lo
+        while pos < hi:
+            c_lo, c_hi, run, rel0 = entries[i]
+            a = rel0 + (pos - c_lo)
+            b = rel0 + (min(hi, c_hi) - c_lo)
+            if per_record:
+                out.extend(run.record_spans(a, b))
+            else:
+                out.extend(run.span(a, b))
+            pos = c_hi
+            i += 1
+        return out
+
+    # -- exact (blocking-aware) chain resolver ------------------------------
     def _resolve(self, meta: LogMeta, lo: int, hi: int, out: List[Span],
                  via_promotable: bool, per_record: bool = False) -> None:
-        if lo >= hi:
-            return
-        if isinstance(meta.index, NaiveIndex):
-            for pos in range(lo, hi):
-                span = meta.index.get(pos)
-                if span is not None:
-                    out.append(span)
-                else:
-                    parent = self.logs.get(meta.parent, None)
-                    if parent is None:
-                        raise UnknownLog(f"position {pos} unresolvable in log {meta.log_id}")
-                    self._resolve(parent, pos, pos + 1, out, via_promotable=True)
-            return
-        for seg in meta.index.segments(lo, hi):
-            if seg[0] == "local":
-                _, a, b, run = seg
+        """Iterative HLI resolution (explicit work stack, no Python recursion)
+        with the §4.1 per-edge blocking checks, in exact DFS order: blocking
+        and unresolvable-position errors are raised when their work item is
+        *reached*, matching the recursive formulation's error order."""
+        # work items: ("log", meta, lo, hi, via, blocked)  expand a chain level
+        #             ("run", run, a, b)                   emit run records
+        #             ("span", span)                       emit one naive span
+        #             ("missing", log_id, a, b)            deferred UnknownLog
+        stack: List[Tuple] = [("log", meta, lo, hi, via_promotable, False)]
+        while stack:
+            item = stack.pop()
+            kind = item[0]
+            if kind == "run":
+                _, run, a, b = item
                 if per_record:
-                    out.extend(run.record_spans(a - run.start, b - run.start))
+                    out.extend(run.record_spans(a, b))
                 else:
-                    out.extend(run.span(a - run.start, b - run.start))
-            else:
-                _, a, b, lcount = seg
-                parent = self.logs.get(meta.parent, None)
-                if parent is None:
-                    raise UnknownLog(
-                        f"positions [{a},{b}) unresolvable in log {meta.log_id}")
-                # per-edge exemption: the promotable child itself (or a frozen
-                # stand-in for it) may see the parent beyond the fork point —
-                # it must, to validate. (`via_promotable` also carries the
-                # snapshot-origin exemption set in read_spans.)
-                edge_exempt = (via_promotable
-                               or meta.log_id in parent.promotable_forks
-                               or (meta.stands_for is not None
-                                   and meta.stands_for in parent.promotable_forks))
-                if (not edge_exempt and parent.alive and self._holds(parent)
-                        and (b - lcount) > self._earliest_fp(parent)):
-                    raise ForkBlocked(
-                        f"reads resolving into log {parent.log_id} beyond its "
-                        "promotable fork point are blocked")
-                self._resolve(parent, a - lcount, b - lcount, out,
-                              via_promotable=via_promotable,
-                              per_record=per_record)
+                    out.extend(run.span(a, b))
+                continue
+            if kind == "span":
+                out.append(item[1])
+                continue
+            if kind == "missing":
+                _, mid, a, b = item
+                raise UnknownLog(f"positions [{a},{b}) unresolvable in log {mid}")
+            _, m, a, b, via, blocked = item
+            if blocked:
+                raise ForkBlocked(
+                    f"reads resolving into log {m.log_id} beyond its "
+                    "promotable fork point are blocked")
+            if a >= b:
+                continue
+            pushes: List[Tuple] = []
+            if isinstance(m.index, NaiveIndex):
+                for pos in range(a, b):
+                    span = m.index.get(pos)
+                    if span is not None:
+                        pushes.append(("span", span))
+                    else:
+                        parent = self.logs.get(m.parent, None)
+                        if parent is None:
+                            pushes.append(("missing", m.log_id, pos, pos + 1))
+                        else:
+                            pushes.append(("log", parent, pos, pos + 1, True, False))
+                stack.extend(reversed(pushes))
+                continue
+            for seg in m.index.segments(a, b):
+                if seg[0] == "local":
+                    _, s_lo, s_hi, run = seg
+                    pushes.append(("run", run, s_lo - run.start, s_hi - run.start))
+                else:
+                    _, g_lo, g_hi, lcount = seg
+                    parent = self.logs.get(m.parent, None)
+                    if parent is None:
+                        pushes.append(("missing", m.log_id, g_lo, g_hi))
+                        continue
+                    # per-edge exemption: the promotable child itself (or a
+                    # frozen stand-in for it) may see the parent beyond the
+                    # fork point — it must, to validate. (`via` also carries
+                    # the snapshot-origin exemption set in read_spans.)
+                    edge_exempt = (via
+                                   or m.log_id in parent.promotable_forks
+                                   or (m.stands_for is not None
+                                       and m.stands_for in parent.promotable_forks))
+                    edge_blocked = (not edge_exempt and parent.alive
+                                    and self._holds(parent)
+                                    and (g_hi - lcount) > self._earliest_fp(parent))
+                    pushes.append(("log", parent, g_lo - lcount, g_hi - lcount,
+                                   via, edge_blocked))
+            stack.extend(reversed(pushes))
 
     # -------------------------------------------------------------- accounting
     def metadata_bytes(self) -> int:

@@ -99,6 +99,8 @@ class OpTally:
     proposals: int = 0
     puts: int = 0
     bytes_put: int = 0
+    gets: int = 0        # store GETs (ranged; post-cache, DESIGN.md §10)
+    bytes_get: int = 0   # bytes actually fetched from the store
 
     @classmethod
     def capture(cls, system, records: int = 0) -> "OpTally":
@@ -107,13 +109,17 @@ class OpTally:
         return cls(records=records,
                    proposals=system.metadata.proposals,
                    puts=getattr(system.store, "put_count", 0),
-                   bytes_put=getattr(system.store, "bytes_written", 0))
+                   bytes_put=getattr(system.store, "bytes_written", 0),
+                   gets=getattr(system.store, "get_count", 0),
+                   bytes_get=getattr(system.store, "bytes_read", 0))
 
     def delta(self, since: "OpTally") -> "OpTally":
         return OpTally(records=self.records - since.records,
                        proposals=self.proposals - since.proposals,
                        puts=self.puts - since.puts,
-                       bytes_put=self.bytes_put - since.bytes_put)
+                       bytes_put=self.bytes_put - since.bytes_put,
+                       gets=self.gets - since.gets,
+                       bytes_get=self.bytes_get - since.bytes_get)
 
     @property
     def proposals_per_record(self) -> float:
@@ -133,8 +139,9 @@ class ServiceTimes:
     broker_cpu_per_kb: float = 0.4e-6      # payload touch cost
     store_put_base: float = 1.5e-3         # S3-like object PUT
     store_put_per_kb: float = 2e-6
-    store_get_base: float = 0.6e-3         # S3-like ranged GET
-    store_get_per_kb: float = 1e-6
+    store_get_base: float = 0.6e-3         # S3-like ranged GET (charged PER GET:
+    store_get_per_kb: float = 1e-6         # Broker._book books each coalesced
+                                           # ranged GET, not whole-object fills)
     disk_read_per_kb: float = 3e-6         # Kafka-like local disk
     disk_seek: float = 80e-6
     metadata_op: float = 12e-6             # sequencing round at metadata layer

@@ -1,0 +1,348 @@
+"""Read-path tests (DESIGN.md §10).
+
+The hard property: the memoized flattened-view resolver and the page-granular
+scatter-gather object cache must be *observationally invisible* — byte-match
+the seed's recursive resolver + whole-object cache across arbitrary
+fork/append/promote/squash interleavings, including the cache-invalidation
+points (promote and squash restructure indexes and HLI edges under the cache).
+"""
+
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BoltSystem
+from repro.core.broker import Broker, GroupCommitConfig
+from repro.core.errors import AgileLogError
+from repro.core.metadata import MetadataState
+from repro.core.objectstore import LRUObjectCache, MemoryObjectStore
+from repro.core.raft import MetadataService
+from repro.core.sim import Resource, ServiceTimes, Simulator
+
+
+# ---------------------------------------------------------------------------
+# flattened-view cache vs the uncached chain resolver
+# ---------------------------------------------------------------------------
+
+class DualStateRunner:
+    """Apply one random command trace to two MetadataStates — view cache on
+    vs off — and require identical observables: results, error types, live
+    logs, tails, and resolved spans (span-level equality implies byte
+    equality: both states sequence identical object ids)."""
+
+    def __init__(self, seed: int, promote_mode: str = "copy"):
+        self.rng = random.Random(seed)
+        self.cached = MetadataState(view_cache=True, promote_mode=promote_mode)
+        self.plain = MetadataState(view_cache=False, promote_mode=promote_mode)
+        ra = self._both(("create_root", "r"))[0]
+        self.live = [ra]
+        self.obj = 0
+
+    def _both(self, cmd):
+        res = []
+        errs = []
+        for state in (self.cached, self.plain):
+            try:
+                res.append(state.apply(cmd))
+                errs.append(None)
+            except AgileLogError as e:
+                res.append(None)
+                errs.append(type(e).__name__)
+        assert errs[0] == errs[1], f"error mismatch on {cmd}: {errs}"
+        assert res[0] == res[1], f"result mismatch on {cmd}: {res}"
+        return res[0], errs[0]
+
+    def _compare_reads(self, lid: int):
+        tail = self.plain.tail(lid)
+        lo = self.rng.randint(0, tail)
+        hi = self.rng.randint(lo, tail)
+        outs = []
+        errs = []
+        for state in (self.cached, self.plain):
+            try:
+                outs.append((state.read_spans(lid, lo, hi),
+                             state.read_record_spans(lid, lo, hi)))
+                errs.append(None)
+            except AgileLogError as e:
+                outs.append(None)
+                errs.append(type(e).__name__)
+        assert errs[0] == errs[1], \
+            f"read error mismatch on log {lid} [{lo},{hi}): {errs}"
+        assert outs[0] == outs[1], \
+            f"span mismatch on log {lid} [{lo},{hi})"
+
+    def step(self):
+        rng = self.rng
+        lid = rng.choice(self.live)
+        op = rng.random()
+        if op < 0.40:
+            k = rng.randint(1, 4)
+            sizes = [rng.randint(1, 64) for _ in range(k)]
+            offsets, off = [], 0
+            for s in sizes:
+                offsets.append(off)
+                off += s
+            self._both(("append", lid, f"o{self.obj}",
+                        tuple(offsets), tuple(sizes)))
+            self.obj += 1
+        elif op < 0.55:
+            self._both(("cfork", lid, rng.random() < 0.3))
+        elif op < 0.65:
+            past = None
+            tail = self.plain.tail(lid)
+            if tail > 0 and rng.random() < 0.5:
+                past = rng.randrange(tail)
+            self._both(("sfork", lid, past))
+        elif op < 0.73:
+            self._both(("promote", lid,
+                        rng.choice(["copy", "splice"])))
+        elif op < 0.80:
+            self._both(("squash", lid))
+        # refresh live set and verify it agrees
+        self.live = self.cached.live_log_ids()
+        assert self.live == self.plain.live_log_ids()
+        for _ in range(2):
+            self._compare_reads(rng.choice(self.live))
+
+    def final_check(self):
+        for lid in self.live:
+            for _ in range(4):
+                self._compare_reads(lid)
+
+
+@pytest.mark.parametrize("promote_mode", ["copy", "splice"])
+@given(seed=st.integers(min_value=0, max_value=100_000))
+@settings(max_examples=25, deadline=None)
+def test_flat_view_matches_plain_resolver(promote_mode, seed):
+    runner = DualStateRunner(seed, promote_mode=promote_mode)
+    for _ in range(80):
+        runner.step()
+    runner.final_check()
+
+
+def test_view_cache_invalidated_on_promote():
+    """Regression: a promote rewrites the parent's post-fork-point positions;
+    a flattened view built *before* the promote must not serve stale spans."""
+    st_ = MetadataState(view_cache=True, promote_mode="copy")
+    root = st_.apply(("create_root", "r"))
+    st_.apply(("append", root, "base", (0, 10), (10, 10)))
+    # populate the root's flattened view
+    before = st_.read_spans(root, 0, 2)
+    assert root in st_._views
+    child = st_.apply(("cfork", root, True))
+    st_.apply(("append", child, "child", (0, 0 + 7), (7, 7)))
+    st_.apply(("promote", child, "copy"))
+    assert st_._views == {}, "promote must drop every flattened view"
+    after = st_.read_spans(root, 0, 4)
+    assert after[:len(before)] == before            # pre-fp prefix unchanged
+    assert [s[0] for s in st_.read_record_spans(root, 2, 4)] == ["child", "child"]
+    # and the rebuilt view byte-matches a from-scratch uncached resolution
+    fresh = MetadataState(view_cache=False, promote_mode="copy")
+    fresh.apply(("create_root", "r"))
+    fresh.apply(("append", 0, "base", (0, 10), (10, 10)))
+    c = fresh.apply(("cfork", 0, True))
+    fresh.apply(("append", c, "child", (0, 7), (7, 7)))
+    fresh.apply(("promote", c, "copy"))
+    assert st_.read_spans(root, 0, 4) == fresh.read_spans(0, 0, 4)
+
+
+def test_view_cache_invalidated_on_squash():
+    st_ = MetadataState(view_cache=True)
+    root = st_.apply(("create_root", "r"))
+    st_.apply(("append", root, "a", (0,), (8,)))
+    mid = st_.apply(("cfork", root, False))
+    st_.apply(("append", mid, "b", (0,), (8,)))
+    leaf_snapshot = st_.apply(("sfork", mid, None))   # depends on mid's index
+    st_.read_spans(leaf_snapshot, 0, 2)               # populate its view
+    st_.apply(("squash", mid))                        # mid frozen, not deleted
+    assert leaf_snapshot in st_.live_log_ids()
+    assert st_.read_record_spans(leaf_snapshot, 0, 2) == [("a", 0, 8), ("b", 0, 8)]
+
+
+def test_view_cache_dropped_from_raft_snapshots():
+    svc = MetadataService(n_replicas=3, snapshot_every=0)
+    root = svc.propose(("create_root", "r"))
+    svc.propose(("append", root, "a", (0, 8), (8, 8)))
+    svc.state.read_spans(root, 0, 2)                  # populate leader view
+    assert svc.state._views
+    for r in svc.replicas:
+        r.take_snapshot()
+    svc.fail_replica(2)
+    svc.recover_replica(2)
+    restored = svc.replicas[2].state
+    assert restored._views == {}                      # derived data not shipped
+    assert restored.read_spans(root, 0, 2) == svc.state.read_spans(root, 0, 2)
+    assert svc.check_convergence()
+
+
+# ---------------------------------------------------------------------------
+# page-granular LRU object cache
+# ---------------------------------------------------------------------------
+
+def _rand_store(rng, n_objects=5, max_bytes=200_000):
+    store = MemoryObjectStore()
+    objs = {}
+    for i in range(n_objects):
+        data = bytes(rng.randrange(256) for _ in range(rng.randrange(1, max_bytes)))
+        objs[f"o{i}"] = data
+        store.put(f"o{i}", data)
+    return store, objs
+
+
+@given(seed=st.integers(min_value=0, max_value=10_000))
+@settings(max_examples=15, deadline=None)
+def test_page_cache_matches_store(seed):
+    rng = random.Random(seed)
+    store, objs = _rand_store(rng)
+    cache = LRUObjectCache(store, capacity_bytes=128 << 10,
+                           page_bytes=4096, readahead_bytes=16 << 10)
+    keys = list(objs)
+    for _ in range(300):
+        k = rng.choice(keys)
+        n = len(objs[k])
+        off = rng.randrange(0, n + 10)
+        ln = rng.choice([None, rng.randrange(0, n + 10)])
+        want = objs[k][off:] if ln is None else objs[k][off:off + ln]
+        assert cache.get(k, off, ln) == want
+    for _ in range(100):
+        spans = []
+        for _ in range(rng.randrange(1, 12)):
+            k = rng.choice(keys)
+            n = len(objs[k])
+            off = rng.randrange(0, n)
+            spans.append((k, off, rng.randrange(0, n - off + 5)))
+        assert cache.get_spans(spans) == [objs[k][o:o + l] for k, o, l in spans]
+
+
+def test_oversized_object_bypasses_cache():
+    """Satellite regression: the seed admitted objects larger than capacity,
+    evicting the entire cache and then caching the oversized object anyway."""
+    store = MemoryObjectStore()
+    store.put("small", b"s" * 1000)
+    big = b"b" * (2 << 20)
+    store.put("big", big)
+    cache = LRUObjectCache(store, capacity_bytes=1 << 20, page_bytes=4096)
+    assert cache.get("small", 0, None) == b"s" * 1000
+    size_before = cache._size
+    assert size_before > 0
+    assert cache.get("big", 0, None) == big              # whole-object read
+    assert cache.get("big", 10, 2 << 20) == big[10:]     # oversized range
+    assert cache._size == size_before, "oversized object must not be admitted"
+    h0 = cache.hits
+    assert cache.get("small", 0, 4) == b"ssss"           # still resident
+    assert cache.hits > h0
+
+
+def test_single_record_read_fetches_pages_not_whole_object():
+    store = MemoryObjectStore()
+    store.put("seg", b"x" * (1 << 20))                   # 1 MB segment
+    cache = LRUObjectCache(store, capacity_bytes=64 << 20, page_bytes=64 << 10)
+    assert cache.get("seg", 500_000, 256) == b"x" * 256
+    assert cache.bytes_fetched <= 64 << 10               # one page, not 1 MB
+
+
+def test_scatter_gather_coalesces_ranged_gets():
+    store = MemoryObjectStore()
+    store.put("a", bytes(range(256)) * 1024)             # 256 KB
+    cache = LRUObjectCache(store, capacity_bytes=64 << 20, page_bytes=4096)
+    # 16 adjacent spans inside one page range -> ONE coalesced ranged GET
+    spans = [("a", 1000 + 100 * i, 100) for i in range(16)]
+    blobs = cache.get_spans(spans)
+    assert blobs == [store.get("a", off, ln) for _, off, ln in spans]
+    assert cache.ranged_gets == 1
+
+
+def test_sequential_readahead_reduces_gets():
+    store = MemoryObjectStore()
+    store.put("s", b"q" * (1 << 20))
+    with_ra = LRUObjectCache(store, capacity_bytes=64 << 20,
+                             page_bytes=4096, readahead_bytes=64 << 10)
+    without = LRUObjectCache(store, capacity_bytes=64 << 20,
+                             page_bytes=4096, readahead_bytes=0)
+    for cache in (with_ra, without):
+        pos = 0
+        while pos + 1000 <= (1 << 20):
+            assert cache.get("s", pos, 1000) == b"q" * 1000
+            pos += 1000
+    assert with_ra.ranged_gets * 4 <= without.ranged_gets
+
+
+# ---------------------------------------------------------------------------
+# broker + system level
+# ---------------------------------------------------------------------------
+
+def test_read_records_books_des_time_and_counts():
+    """Satellite regression: record-oriented reads never called _book and
+    never bumped `reads`, making them invisible to the isolation model."""
+    sim = Simulator()
+    store = MemoryObjectStore()
+    store_res = Resource(servers=4)
+    meta = MetadataService(n_replicas=3)
+    broker = Broker(0, store, meta, sim=sim, service=ServiceTimes(),
+                    store_resource=store_res)
+    log_id = meta.propose(("create_root", "r"))
+    broker.append(log_id, [b"a" * 512, b"b" * 512], arrival=0.0)
+    jobs0 = store_res.jobs
+    records, done = broker.read_records(log_id, 0, 2, arrival=1.0)
+    assert records == [b"a" * 512, b"b" * 512]
+    assert broker.reads == 1
+    assert done > 1.0, "read_records must book simulated service time"
+    assert store_res.jobs > jobs0, "cold read must hit the store resource"
+    # warm read: pages resident, so no store GET is booked
+    jobs1 = store_res.jobs
+    _, done2 = broker.read_records(log_id, 0, 2, arrival=2.0)
+    assert broker.reads == 2
+    assert store_res.jobs == jobs1
+    assert 2.0 < done2 < done - 1.0 + 2.0
+
+
+def test_dedicated_fork_broker_never_parents_broker():
+    """Satellite regression: with 2 brokers and the parent on broker 1, the
+    re-map `(b % (len-1)) + 1` landed back on the parent's broker."""
+    system = BoltSystem(n_brokers=2)
+    root = system.create_log("r")
+    assert root.broker.broker_id == 0
+    f1 = root.cfork()
+    assert f1.broker.broker_id == 1
+    for _ in range(4):
+        f2 = f1.cfork(dedicated=True)
+        assert f2.broker.broker_id != f1.broker.broker_id
+        f3 = f1.sfork(dedicated=True)
+        assert f3.broker.broker_id != f1.broker.broker_id
+
+
+def test_scan_streams_identical_to_read():
+    with BoltSystem(group_commit=GroupCommitConfig(max_records=64)) as system:
+        log = system.create_log("s")
+        records = [f"r{i:05d}".encode() for i in range(1000)]
+        for r in records:
+            log.append(r)
+        # staged records: scan must flush first (read-your-writes)
+        assert list(log.scan()) == records
+        assert list(log.scan(batch=7)) == records          # odd batch splits
+        assert list(log.scan(100, 900, batch=256)) == records[100:900]
+        assert list(log.scan(500, 500)) == []
+        # eager validation: errors raise at the call site, like read()
+        from repro.core.errors import InvalidOperation
+        with pytest.raises(InvalidOperation):
+            log.scan(10, 5)
+        with pytest.raises(InvalidOperation):
+            log.scan(0, 10_000)
+        with pytest.raises(InvalidOperation):
+            log.scan(batch=0)
+        fork = log.cfork()
+        fork.append(b"tail")
+        assert list(fork.scan(990)) == records[990:] + [b"tail"]
+
+
+def test_scan_snapshots_tail_at_start():
+    system = BoltSystem()
+    log = system.create_log("s")
+    for i in range(10):
+        log.append(b"%d" % i)
+    it = log.scan(batch=4)
+    first = [next(it) for _ in range(4)]
+    log.append(b"late")
+    rest = list(it)
+    assert first + rest == [b"%d" % i for i in range(10)]  # no 'late'
