@@ -1,0 +1,196 @@
+"""Metadata fast-path benchmarks (DESIGN.md §11): the control plane under
+agent load.
+
+Four families:
+
+* ``meta/lookup_hold``   — single-position lookup latency on a depth-7 cFork
+                           chain while 0/1/4 promotable holds are active on
+                           *sibling* branches (acceptance: within 2x of the
+                           no-hold cached latency; the pre-§11 gate fell back
+                           to the 12-15x chain walk the moment any hold
+                           existed anywhere).
+* ``meta/lookup_held``   — lookups on the logs the holds actually constrain:
+                           the holder's visible prefix and the promotable
+                           child's unbounded view, both served from cache.
+* ``meta/promote_reread``— promote latency PLUS re-serving one read on each
+                           of N warm views on unrelated logs: scoped
+                           invalidation keeps them warm (flat in N), the old
+                           wholesale clear rebuilt every one of them.
+* ``meta/proposals``     — metadata proposals/sec with pipelined vs
+                           synchronous replica apply (3 replicas).
+
+Quick mode for CI smoke runs: ``BENCH_QUICK=1`` shrinks sizes ~8x.
+"""
+
+from __future__ import annotations
+
+import gc
+import os
+import time
+from typing import List
+
+from repro.core.metadata import MetadataState
+from repro.core.raft import MetadataService
+
+from .common import Row, timeit
+
+QUICK = os.environ.get("BENCH_QUICK", "") not in ("", "0")
+
+
+def _append(state, log_id, n, tag, batch=512):
+    done = 0
+    while done < n:
+        k = min(batch, n - done)
+        state.apply(("append", log_id, f"{tag}-{done}",
+                     tuple(range(0, 8 * k, 8)), tuple([8] * k)))
+        done += k
+
+
+def _deep_chain(state, root, levels, per_level, tag):
+    """A `levels`-deep cFork chain off `root`; returns the deepest log."""
+    log_id = root
+    for depth in range(levels):
+        _append(state, log_id, per_level, f"{tag}{depth}")
+        log_id = state.apply(("cfork", log_id, False))
+    return log_id
+
+
+def bench_meta() -> List[Row]:
+    rows: List[Row] = []
+    levels = 7
+    per_level = 2_500 if QUICK else 20_000
+    n_calls = 500 if QUICK else 2_000
+
+    # -- lookup vs sibling-branch holds -------------------------------------
+    # One root; the reader is a depth-7 chain off branch R. Holds live on
+    # OTHER branches of the root: each hold's holder is the sibling branch
+    # log itself, so the reader's lineage never contains a holder.
+    state = MetadataState(view_cache=True)
+    root = state.apply(("create_root", "r"))
+    _append(state, root, per_level, "root")
+    reader_branch = state.apply(("cfork", root, False))
+    deepest = _deep_chain(state, reader_branch, levels, per_level, "rd")
+    siblings = [state.apply(("cfork", root, False)) for _ in range(4)]
+    for s in siblings:
+        _append(state, s, 64, f"sib{s}")
+    pos = per_level * 2 + per_level // 2          # resolves depth >= 5
+    tail = state.tail(deepest)
+    assert pos < tail
+
+    lookup = {}
+    active = []
+    gc.collect()   # the big setup states above otherwise leak GC pauses
+    for n_holds in (0, 1, 4):   # into the microsecond-scale lookup timings
+        while len(active) < n_holds:
+            active.append(state.apply(("cfork", siblings[len(active)], True)))
+        assert len(state._holders) == n_holds
+        gc.collect()
+        us = timeit(lambda: state.read_spans(deepest, pos, pos + 1), n=n_calls)
+        lookup[n_holds] = us
+        rows.append((f"meta/lookup_hold/cached/holds={n_holds}", us,
+                     f"depth>=5 lookup, {n_holds} sibling-branch holds"))
+    for n_holds in (1, 4):
+        ratio = lookup[n_holds] / lookup[0]
+        rows.append((f"meta/lookup_hold/penalty/holds={n_holds}", ratio,
+                     f"{ratio:.2f}x of no-hold cached (acceptance <=2x)"))
+    # reference: what the pre-§11 global gate cost under any hold
+    plain = MetadataState(view_cache=False)
+    p_root = plain.apply(("create_root", "r"))
+    _append(plain, p_root, per_level, "root")
+    p_branch = plain.apply(("cfork", p_root, False))
+    p_deep = _deep_chain(plain, p_branch, levels, per_level, "rd")
+    us = timeit(lambda: plain.read_spans(p_deep, pos, pos + 1), n=n_calls)
+    rows.append(("meta/lookup_hold/uncached_chain_walk", us,
+                 f"pre-§11 fallback: {us / lookup[0]:.1f}x the cached lookup"))
+
+    # -- lookups on the held lineage itself ---------------------------------
+    holder = siblings[0]                           # holds active[0]
+    h_tail = state.visible_tail(holder)
+    us = timeit(lambda: state.read_spans(holder, h_tail - 1, h_tail), n=n_calls)
+    rows.append(("meta/lookup_held/holder_visible_prefix", us,
+                 "holder's reads below fp, served from the capped view"))
+    _append(state, holder, 64, "withheld")         # beyond the fork point
+    child = active[0]
+    c_tail = state.tail(child)
+    us = timeit(lambda: state.read_spans(child, c_tail - 1, c_tail), n=n_calls)
+    rows.append(("meta/lookup_held/promotable_child_beyond_fp", us,
+                 "validating child reads past fp, served from its view"))
+
+    # -- promote vs N warm views on unrelated DEEP logs ---------------------
+    # The pre-§11 wholesale clear made every promote rebuild every view in
+    # the system on its next read. Unrelated views here share a deep,
+    # many-run lineage (rebuild is a full chain flatten); the post-promote
+    # read is a single deep lookup (cheap iff the view survived).
+    n_unrelated = (64 if QUICK else 256)
+    reps = 3 if QUICK else 5
+    promote_us = {}
+    reread_us = {}
+    for mode in ("scoped", "wholesale"):
+        for n_views in (0, n_unrelated):
+            p_total = r_total = 0.0
+            for _ in range(reps):
+                st = MetadataState(view_cache=True, promote_mode="splice")
+                rt = st.apply(("create_root", "r"))
+                _append(st, rt, 256, "r")
+                other_root = st.apply(("create_root", "other"))
+                deep = other_root
+                for d in range(6):                 # many small runs per level
+                    _append(st, deep, 256, f"d{d}", batch=8)
+                    deep = st.apply(("cfork", deep, False))
+                d_tail = st.tail(deep)
+                others = []
+                for _ in range(n_views):
+                    f = st.apply(("cfork", deep, False))
+                    st.read_spans(f, d_tail - 1, d_tail)   # warm a deep view
+                    others.append(f)
+                ch = st.apply(("cfork", rt, True))
+                st.apply(("append", ch, "c", (0,), (8,)))
+                t0 = time.perf_counter()
+                st.apply(("promote", ch, "splice"))
+                if mode == "wholesale":
+                    st._invalidate_views()         # emulate the pre-§11 clear
+                t1 = time.perf_counter()
+                for f in others:
+                    st.read_spans(f, d_tail - 1, d_tail)
+                t2 = time.perf_counter()
+                p_total += t1 - t0
+                r_total += t2 - t1
+            promote_us[(mode, n_views)] = p_total / reps * 1e6
+            if n_views:
+                reread_us[mode] = r_total / (reps * n_views) * 1e6
+        rows.append((f"meta/promote_reread/{mode}/promote_us",
+                     promote_us[(mode, n_unrelated)],
+                     f"promote latency with {n_unrelated} live unrelated views"))
+        rows.append((f"meta/promote_reread/{mode}/reread_us", reread_us[mode],
+                     f"per deep lookup after the promote "
+                     f"({'views survived' if mode == 'scoped' else 'every view rebuilt'})"))
+    p_scale = (promote_us[("scoped", n_unrelated)]
+               / max(1e-9, promote_us[("scoped", 0)]))
+    rows.append(("meta/promote_reread/scoped/promote_scaling", p_scale,
+                 f"{p_scale:.2f}x promote cost at {n_unrelated} views vs 0 "
+                 "(flat: promote no longer touches unrelated views)"))
+    penalty = reread_us["wholesale"] / reread_us["scoped"]
+    rows.append(("meta/promote_reread/rebuild_penalty", penalty,
+                 f"{penalty:.1f}x slower post-promote lookups under the "
+                 "pre-§11 wholesale clear"))
+
+    # -- proposals/sec: pipelined vs synchronous replica apply --------------
+    n_props = 2_000 if QUICK else 10_000
+    per_mode = {}
+    for pipelined, tag in ((True, "pipelined"), (False, "sync")):
+        svc = MetadataService(n_replicas=3, pipeline_apply=pipelined)
+        lid = svc.propose(("create_root", "r"))
+        offs = tuple(range(0, 64, 8))
+        lens = tuple([8] * 8)
+        t0 = time.perf_counter()
+        for i in range(n_props):
+            svc.propose(("append", lid, f"o{i}", offs, lens))
+        dt = time.perf_counter() - t0
+        assert svc.check_convergence()             # drains deferred applies
+        per_mode[tag] = dt / n_props * 1e6
+        rows.append((f"meta/proposals/{tag}", per_mode[tag],
+                     f"{n_props / dt:.0f} proposals/s (3 replicas)"))
+    speedup = per_mode["sync"] / per_mode["pipelined"]
+    rows.append(("meta/proposals/speedup", speedup,
+                 f"{speedup:.2f}x faster propose with deferred follower apply"))
+    return rows

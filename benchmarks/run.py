@@ -21,6 +21,7 @@ from .bench_forks import (bench_fork_impact, bench_fork_latency,
                           bench_lookup_depth, bench_metadata_memory,
                           bench_promote)
 from .bench_isolation import bench_isolation
+from .bench_meta import bench_meta
 from .bench_pipeline import bench_pipeline
 from .bench_read import bench_read
 from .bench_roofline import bench_roofline
@@ -37,6 +38,7 @@ ALL = [
     ("fig12_14_agents", bench_agents),
     ("append_group_commit", bench_append),
     ("read_path", bench_read),
+    ("meta_path", bench_meta),
     ("data_pipeline", bench_pipeline),
     ("roofline", bench_roofline),
 ]

@@ -1,0 +1,87 @@
+#!/usr/bin/env python
+"""Diff two benchmark JSON dumps and fail on regressions (ISSUE 3 satellite).
+
+Usage:
+    python scripts/bench_compare.py BASE.json NEW.json \
+        --key meta/lookup_hold/penalty/holds=4 \
+        --key-up meta/proposals/speedup \
+        [--max-regress 0.25]
+
+``--key``    names a lower-is-better value (latencies, penalty ratios):
+             regression when new > base * (1 + max_regress).
+``--key-up`` names a higher-is-better value (speedups):
+             regression when new < base * (1 - max_regress).
+
+Keys may be given multiple times. A key missing from NEW fails (a renamed or
+dropped benchmark must update the CI wiring deliberately); a key missing from
+BASE is reported and skipped (first run after adding a benchmark). Exit code
+is 1 iff any named key regressed by more than ``--max-regress`` (default 25%).
+
+Ratio-style keys are the ones worth wiring into CI: they are dimensionless,
+so they stay comparable across machines, unlike absolute microseconds.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("base", help="baseline JSON ({row_name: value})")
+    ap.add_argument("new", help="candidate JSON")
+    ap.add_argument("--key", action="append", default=[],
+                    help="lower-is-better key to check (repeatable)")
+    ap.add_argument("--key-up", action="append", default=[],
+                    help="higher-is-better key to check (repeatable)")
+    ap.add_argument("--max-regress", type=float, default=0.25,
+                    help="allowed fractional regression (default 0.25)")
+    args = ap.parse_args()
+    if not args.key and not args.key_up:
+        print("bench_compare: no keys named, nothing to check")
+        return 0
+
+    with open(args.base) as f:
+        base = json.load(f)
+    with open(args.new) as f:
+        new = json.load(f)
+
+    failed = []
+    checked = 0
+    for key, higher_better in ([(k, False) for k in args.key]
+                               + [(k, True) for k in args.key_up]):
+        if key not in new:
+            print(f"FAIL  {key}: missing from {args.new}")
+            failed.append(key)
+            checked += 1
+            continue
+        if key not in base:
+            print(f"skip  {key}: not in baseline (new benchmark)")
+            continue
+        b, n = float(base[key]), float(new[key])
+        checked += 1
+        if higher_better:
+            bad = n < b * (1.0 - args.max_regress)
+            change = (b - n) / b if b else 0.0
+        else:
+            bad = n > b * (1.0 + args.max_regress)
+            change = (n - b) / b if b else 0.0
+        status = "FAIL" if bad else "ok  "
+        arrow = "down" if higher_better else "up"
+        print(f"{status}  {key}: base={b:.3f} new={n:.3f} "
+              f"({change * 100:+.1f}% {arrow}-is-worse)")
+        if bad:
+            failed.append(key)
+
+    if failed:
+        print(f"bench_compare: {len(failed)} of {checked} checked keys "
+              f"regressed >{args.max_regress * 100:.0f}%: " + ", ".join(failed))
+        return 1
+    print(f"bench_compare: {checked} keys within {args.max_regress * 100:.0f}%")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

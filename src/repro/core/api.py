@@ -44,7 +44,8 @@ class BoltSystem:
                  cache_bytes: int = 64 << 20,
                  cache_page_bytes: int = 64 << 10,
                  readahead_bytes: int = 256 << 10,
-                 view_cache: bool = True) -> None:
+                 view_cache: bool = True,
+                 pipeline_apply: bool = True) -> None:
         if group_commit is True:
             group_commit = GroupCommitConfig()
         elif group_commit is False or group_commit == 0:
@@ -60,6 +61,7 @@ class BoltSystem:
         self.store = store if store is not None else MemoryObjectStore()
         self.metadata = MetadataService(
             n_replicas=n_meta_replicas, snapshot_every=snapshot_every,
+            pipeline_apply=pipeline_apply,
             cf_mode=cf_mode, fork_mode=fork_mode, promote_mode=promote_mode,
             view_cache=view_cache)
         self.brokers = [Broker(i, self.store, self.metadata,

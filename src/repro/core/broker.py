@@ -220,7 +220,8 @@ class Broker:
         if self._staged and any(p.log_id == log_id for p, _ in self._staged):
             self.flush()
 
-    def _cached_read(self, spans, arrival: Optional[float]) -> Tuple[List[bytes], float]:
+    def _cached_read(self, spans, arrival: Optional[float],
+                     meta_cached: bool = False) -> Tuple[List[bytes], float]:
         """Scatter-gather the spans through the page cache; book broker CPU on
         the bytes *returned* but store GETs only on what was actually
         *fetched* (ranged GETs, not whole-object fills — DESIGN.md §10)."""
@@ -230,31 +231,47 @@ class Broker:
         done = self._book(arrival,
                           read_bytes=sum(len(b) for b in blobs),
                           fetch_bytes=self.cache.bytes_fetched - b0,
-                          get_ops=self.cache.ranged_gets - g0)
+                          get_ops=self.cache.ranged_gets - g0,
+                          meta_cached=meta_cached)
         return blobs, done
+
+    def _resolve_spans(self, log_id: int, lo: int, hi: int,
+                       per_record: bool) -> Tuple[List, bool]:
+        """Metadata resolution plus whether the flattened-view fast path
+        served it (§11) — the DES model books a cheaper metadata op for
+        cached lookups than for exact chain walks."""
+        state = self.metadata.state
+        c0 = state.stats.cached_reads
+        if per_record:
+            spans = state.read_record_spans(log_id, lo, hi)
+        else:
+            spans = state.read_spans(log_id, lo, hi)
+        return spans, state.stats.cached_reads > c0
 
     def read(self, log_id: int, lo: int, hi: int,
              arrival: Optional[float] = None) -> Tuple[List[bytes], float]:
         self._flush_if_staged(log_id)
-        spans = self.metadata.state.read_spans(log_id, lo, hi)
-        return self._cached_read(spans, arrival)
+        spans, meta_cached = self._resolve_spans(log_id, lo, hi, per_record=False)
+        return self._cached_read(spans, arrival, meta_cached)
 
     def read_records(self, log_id: int, lo: int, hi: int,
                      arrival: Optional[float] = None) -> Tuple[List[bytes], float]:
         """Read and return individual records (one span per record)."""
         self._flush_if_staged(log_id)
-        spans = self.metadata.state.read_record_spans(log_id, lo, hi)
-        return self._cached_read(spans, arrival)
+        spans, meta_cached = self._resolve_spans(log_id, lo, hi, per_record=True)
+        return self._cached_read(spans, arrival, meta_cached)
 
     # -- DES accounting -----------------------------------------------------------
     def _book(self, arrival: Optional[float], write_bytes: int = 0,
               read_bytes: int = 0, fetch_bytes: Optional[int] = None,
-              get_ops: Optional[int] = None) -> float:
+              get_ops: Optional[int] = None,
+              meta_cached: bool = False) -> float:
         """`read_bytes` is what the client receives (broker CPU touches it);
         `fetch_bytes`/`get_ops` are the actual store traffic — cache hits cost
         no store time, and one coalesced ranged GET costs one `store_get_base`,
         however many spans it served. They default to the pre-cache model
-        (every read is one whole GET) when not supplied."""
+        (every read is one whole GET) when not supplied. `meta_cached` books
+        the flattened-view lookup cost instead of the chain-walk one (§11)."""
         if self.sim is None or arrival is None:
             return 0.0
         s = self.service
@@ -271,7 +288,7 @@ class Broker:
             if get_ops:
                 t = self.store_resource.submit(
                     t, get_ops * s.store_get_base + s.store_get_per_kb * fetch_bytes / 1024)
-        t += s.metadata_op + s.net_rtt
+        t += (s.metadata_op_cached if meta_cached else s.metadata_op) + s.net_rtt
         return t
 
 
@@ -286,12 +303,15 @@ class KafkaLikeBroker(Broker):
 
     def _book(self, arrival: Optional[float], write_bytes: int = 0,
               read_bytes: int = 0, fetch_bytes: Optional[int] = None,
-              get_ops: Optional[int] = None) -> float:
+              get_ops: Optional[int] = None,
+              meta_cached: bool = False) -> float:
         # Every read is served from this broker's local disk: the page cache's
         # fetch accounting (fetch_bytes/get_ops) must NOT exempt the baseline
         # — a free RAM cache here would understate the very read contention
-        # this baseline exists to measure (§6.2), so bytes returned are
-        # charged to the disk unconditionally, as in the seed model.
+        # this baseline exists to measure (§6.2); likewise the metadata op is
+        # charged at the uncached rate (the baseline has no §11 fast path),
+        # so bytes returned are charged to the disk unconditionally, as in
+        # the seed model.
         if self.sim is None or arrival is None:
             return 0.0
         s = self.service

@@ -157,6 +157,14 @@ class RunIndex:
                 yield ("local", pos, seg_hi, r)
                 pos = seg_hi
 
+    def content_digest(self) -> Tuple:
+        """Hashable run-level content identity: positions, object ids, and
+        exact byte ranges. Two indexes with equal tails can still differ here
+        (e.g. a promote splice replayed differently), which is what the
+        replica-convergence check must catch."""
+        return tuple((r.start, r.object_id, r.offsets.tobytes(), r.lengths.tobytes())
+                     for r in self._runs)
+
     def snapshot(self) -> "RunIndex":
         """O(runs) snapshot sharing the (immutable) Run objects — used when a
         promote must preserve the old index for severed/frozen dependents."""
@@ -192,6 +200,10 @@ class NaiveIndex:
 
     def get(self, pos: int) -> Optional[Span]:
         return self.entries.get(pos)
+
+    def content_digest(self) -> Tuple:
+        return (tuple(sorted(self.entries.items())),
+                tuple(sorted(self._local_positions)))
 
     def nbytes(self) -> int:
         n = sys.getsizeof(self.entries) + sys.getsizeof(self._local_positions)

@@ -137,6 +137,21 @@ class LazyTailTree:
         return idx
 
     @staticmethod
+    def _kth(root: _Node, k: int) -> _Node:
+        """Node at tour index k (order-statistic walk; lazy values do not
+        affect structure, so no push is needed)."""
+        x = root
+        while True:
+            ls = _size(x.left)
+            if k < ls:
+                x = x.left
+            elif k == ls:
+                return x
+            else:
+                k -= ls + 1
+                x = x.right
+
+    @staticmethod
     def _value(x: _Node) -> Tuple[int, int]:
         tail, blk = x.tail, x.blocked
         p = x.parent
@@ -241,6 +256,24 @@ class LazyTailTree:
         del self._enter[log_id]
         del self._exit[log_id]
 
+    def direct_children(self, log_id: int) -> List[int]:
+        """Immediate children of log_id in tour order, O(children * log n):
+        hop from each child's enter marker to just past its exit marker
+        instead of touring the whole subtree (promote re-parents only the
+        promoted child's direct children, DESIGN.md §11)."""
+        e = self._enter[log_id]
+        root = self._root(e)
+        i = self._index(e)
+        j = self._index(self._exit[log_id])
+        out: List[int] = []
+        k = i + 1
+        while k < j:
+            node = self._kth(root, k)
+            assert node.is_enter, "tour structure corrupt: expected enter marker"
+            out.append(node.log_id)
+            k = self._index(self._exit[node.log_id]) + 1
+        return out
+
     def subtree_ids(self, log_id: int) -> List[int]:
         """Log ids in subtree(log_id) in tour order (O(subtree); test/debug use)."""
         e = self._enter[log_id]
@@ -316,6 +349,9 @@ class EagerTailMap:
         for x in removed:
             del self.tail[x], self.blocked[x], self.children[x], self.parent[x]
         return removed
+
+    def direct_children(self, log_id: int) -> List[int]:
+        return list(self.children[log_id])
 
     def remove_node_keep_children(self, log_id: int) -> None:
         p = self.parent[log_id]

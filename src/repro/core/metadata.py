@@ -33,7 +33,7 @@ from __future__ import annotations
 
 import bisect
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, Iterable, List, Optional, Set, Tuple
 
 import numpy as np
 
@@ -64,22 +64,55 @@ class LogMeta:
 
 
 class _FlatView:
-    """Memoized flattened resolution of one log's view (DESIGN.md §10).
+    """Memoized flattened resolution of one log's view (DESIGN.md §10-§11).
 
     ``entries`` is a position-contiguous list of ``(c_lo, c_hi, run, rel0)``:
     positions ``[c_lo, c_hi)`` of the viewing log resolve into ancestor index
     run ``run`` at run-relative record ``rel0 + (pos - c_lo)``. A lookup is a
     bisect over ``los`` plus a numpy slice of the run — O(log runs), never a
-    chain walk. Views are built lazily (extended to the highest position read
-    so far, ``hi``) and invalidated wholesale on structural mutations."""
+    chain walk. Views build lazily (extended to the highest position read so
+    far, ``hi``).
 
-    __slots__ = ("version", "hi", "los", "entries")
+    ``lineage`` is the view's resolution footprint: the set of log ids on the
+    owner's HLI parent chain at build time (owner included). It drives the
+    two §11 mechanisms: *scoped invalidation* (promote/squash drop only views
+    whose lineage intersects the restructured logs, via the reverse map
+    ``MetadataState._view_deps``) and *hold awareness* (a view is servable
+    under active promotable cForks up to ``cap``, the visibility prefix
+    derived from the holds on its lineage; ``cap_key`` memoizes which
+    holds-epoch the cap was computed for)."""
 
-    def __init__(self, version: int) -> None:
+    __slots__ = ("version", "hi", "los", "entries", "lineage", "cap", "cap_key")
+
+    def __init__(self, version: int, lineage: frozenset) -> None:
         self.version = version
         self.hi = 0
         self.los: List[int] = []
         self.entries: List[Tuple[int, int, object, int]] = []
+        self.lineage = lineage
+        self.cap: Optional[int] = None   # meaningful only when cap_key is current
+        self.cap_key = -1
+
+
+@dataclass
+class ViewStats:
+    """Read-path counters (DESIGN.md §11): how often the metadata fast path
+    engages, and what holds / restructures cost it. Brokers snapshot these
+    around each resolution to book cached vs uncached metadata service time
+    in the DES model."""
+
+    hits: int = 0           # reads served from a flattened view, no hold on lineage
+    capped_hits: int = 0    # served from a view while a lineage hold was active
+    slow_reads: int = 0     # exact blocking-aware resolver (cache off or hold fallback)
+    builds: int = 0         # views built
+    extends: int = 0        # lazy view extensions
+    cap_computes: int = 0   # visibility-cap computations (then memoized per epoch)
+    invalidated: int = 0    # views dropped by scoped invalidation
+    full_clears: int = 0    # wholesale clears (belt-and-braces fallback)
+
+    @property
+    def cached_reads(self) -> int:
+        return self.hits + self.capped_hits
 
 
 class MetadataState:
@@ -101,21 +134,29 @@ class MetadataState:
             self.tails = EagerTailMap()
         # naive/metacopy variants use per-record NaiveIndex
         self._use_naive_index = cf_mode == "naive" or fork_mode == "metacopy"
-        # -- read path (DESIGN.md §10) -------------------------------------
+        # -- read path (DESIGN.md §10-§11) ---------------------------------
         # Flattened-view cache: per-log memoized (ancestor run, shift) tables.
-        # Only engaged while NO log holds an active promotable cFork
-        # (`_holders` empty): with zero holds the §4.1 blocking checks cannot
-        # fire anywhere, so the checks-free flattened lookup is exact.
+        # Engagement is lineage-scoped (§11): a view serves reads whenever no
+        # active promotable cFork lies on ITS OWN resolution lineage; under a
+        # lineage hold it still serves the visibility prefix (up to `cap`),
+        # with only beyond-cap reads delegated to the exact blocking-aware
+        # resolver. Holds elsewhere in the forest never disengage it.
         self.view_cache = view_cache and not self._use_naive_index
         self.structure_version = 0
+        self.holds_version = 0            # bumped whenever hold state changes
         self._views: Dict[int, _FlatView] = {}
+        self._view_deps: Dict[int, Set[int]] = {}  # log id -> view owners through it
         self._holders: Set[int] = set()   # log ids with >=1 promotable fork
+        self.stats = ViewStats()
 
     def __getstate__(self) -> dict:
-        # Raft snapshots pickle the whole state machine; the view cache is
-        # derived data (and may be large), so it is dropped and rebuilt lazily.
+        # Raft snapshots pickle the whole state machine; the view cache and
+        # its reverse-dependency map are derived data (and may be large), so
+        # they are dropped and rebuilt lazily.
         d = self.__dict__.copy()
         d["_views"] = {}
+        d["_view_deps"] = {}
+        d["stats"] = ViewStats()
         return d
 
     # ------------------------------------------------------------------ utils
@@ -142,19 +183,51 @@ class MetadataState:
 
     def _sync_holder(self, meta: LogMeta) -> None:
         """Keep the active-holders set consistent after a promotable_forks
-        mutation (the flattened-view fast path keys off `_holders` emptiness)."""
+        mutation; bumping ``holds_version`` expires every memoized view cap."""
         if meta.promotable_forks:
             self._holders.add(meta.log_id)
         else:
             self._holders.discard(meta.log_id)
+        self.holds_version += 1
+
+    # -- invalidation (DESIGN.md §11) ---------------------------------------
+    def _drop_view(self, owner: int) -> None:
+        view = self._views.pop(owner, None)
+        if view is None:
+            return
+        for lid in view.lineage:
+            deps = self._view_deps.get(lid)
+            if deps is not None:
+                deps.discard(owner)
+                if not deps:
+                    del self._view_deps[lid]
+        self.stats.invalidated += 1
+
+    def _invalidate_through(self, log_ids: Iterable[int]) -> None:
+        """Scoped invalidation: drop only the views whose lineage resolves
+        through any of ``log_ids`` (the restructured subtree). Views on
+        unrelated logs — other topics, other branches — survive, which is
+        what keeps promote/squash latency independent of how many flattened
+        views are live elsewhere."""
+        owners: Set[int] = set()
+        for lid in log_ids:
+            deps = self._view_deps.get(lid)
+            if deps:
+                owners.update(deps)
+        for owner in owners:
+            self._drop_view(owner)
 
     def _invalidate_views(self) -> None:
-        """Structural mutation (promote/squash/freeze/GC): every flattened
-        view may now resolve through a rewritten index or rebound HLI edge,
-        so the whole cache is dropped (views rebuild lazily on next read)."""
+        """Belt-and-braces fallback: drop EVERY flattened view and expire any
+        view object still referenced elsewhere via the version bump. The §11
+        scoped path (`_invalidate_through`) supersedes this on the
+        promote/squash hot path; this remains for wholesale resets."""
         self.structure_version += 1
+        self.holds_version += 1
         if self._views:
             self._views.clear()
+        self._view_deps.clear()
+        self.stats.full_clears += 1
 
     # --------------------------------------------------------------- commands
     def apply(self, cmd: Tuple) -> object:
@@ -258,7 +331,7 @@ class MetadataState:
                 self.tails.range_add(parent_id, d_blocked=+1)  # now incl. child
             self.tails.range_add(child_id, d_blocked=-1)       # child exempt
             parent.promotable_forks[child_id] = fp
-            self._holders.add(parent_id)
+            self._sync_holder(parent)
         return child_id
 
     def _apply_sfork(self, parent_id: int, past: Optional[int]) -> int:
@@ -302,7 +375,9 @@ class MetadataState:
                     changed = True
         for d in removed:
             meta = self.logs[d]
-            self._holders.discard(d)
+            if d in self._holders:
+                self._holders.discard(d)
+                self.holds_version += 1
             if d in keep:
                 meta.kind = "frozen"   # index kept alive for dependents
                 meta.promotable_forks.clear()
@@ -322,6 +397,7 @@ class MetadataState:
                         if v.kind == "frozen" and not v.hli_children]:
                 meta = self.logs.pop(lid)
                 self._holders.discard(lid)
+                self._invalidate_through((lid,))
                 if meta.parent is not None and meta.parent in self.logs:
                     self.logs[meta.parent].hli_children.discard(lid)
                 progressed = True
@@ -330,10 +406,14 @@ class MetadataState:
         meta = self._get(log_id)
         if meta.kind == "root":
             raise InvalidOperation("cannot squash the root log (§4.1)")
-        self._invalidate_views()
         parent = self.logs.get(meta.ltt_parent) if meta.ltt_parent is not None else None
         was_promotable = (parent is not None and log_id in parent.promotable_forks)
         removed = self.tails.remove_subtree(log_id)
+        # scoped invalidation (§11): only views resolving through the removed
+        # subtree can go stale — the surviving logs' indexes, tails, and HLI
+        # edges are untouched by a squash, so their views stay live (releasing
+        # a hold is a visibility change, handled by the holds_version bump)
+        self._invalidate_through(removed)
         if was_promotable:
             del parent.promotable_forks[log_id]
             self._sync_holder(parent)
@@ -356,7 +436,12 @@ class MetadataState:
             raise ForkBlocked(
                 "cannot promote into a log blocked by an ancestor's promotable cFork")
         assert child_id in parent.promotable_forks
-        self._invalidate_views()
+        # scoped invalidation (§11): a promote rewrites the parent's index
+        # (copy) or replaces it behind a frozen stand-in (splice), deletes the
+        # child, and re-binds the child's HLI dependents — every affected view
+        # resolves through `parent` or `child`, so only their dependents drop
+        # (sibling squashes below invalidate their own subtrees)
+        self._invalidate_through((parent.log_id, child_id))
         # 1. first promote wins: squash other promotable siblings (§4.1)
         for sib in [c for c in parent.promotable_forks if c != child_id]:
             self._apply_squash(sib)
@@ -393,8 +478,10 @@ class MetadataState:
             self.logs[dep].parent = parent.log_id
             parent.hli_children.add(dep)
         # 6. child's LTT children re-parent to parent; child's markers vanish
-        for d in self.tails.subtree_ids(child_id):
-            if d != child_id and self.logs[d].ltt_parent == child_id:
+        # (direct_children, not an O(subtree) tour: only the immediate
+        # children carry an ltt_parent pointer at the promoted node)
+        for d in self.tails.direct_children(child_id):
+            if self.logs[d].ltt_parent == child_id:
                 self.logs[d].ltt_parent = parent.log_id
         self.tails.remove_node_keep_children(child_id)
         if child.parent is not None and child.parent in self.logs:
@@ -426,7 +513,7 @@ class MetadataState:
             gp = self.logs[parent.parent]
             gp.hli_children.discard(parent.log_id)
             gp.hli_children.add(frozen_id)
-        self._rebind_snapshot_deps(parent, frozen)
+        self._rebind_snapshot_deps(parent, frozen, child)
         # splice: parent continues the child's lineage
         parent.index = child.index
         if child.parent == parent.log_id:
@@ -440,12 +527,33 @@ class MetadataState:
             self.logs[child.parent].hli_children.discard(child.log_id)
             self.logs[child.parent].hli_children.add(parent.log_id)
 
-    def _rebind_snapshot_deps(self, parent: LogMeta, frozen: LogMeta) -> None:
-        """Severed forks and frozen chains hanging off `parent` hold positional
-        snapshots of the *old* parent content — a promote rewrites positions
-        beyond the fork point, so those dependents move to the frozen copy."""
-        for dep in [d for d in list(parent.hli_children)
-                    if self.logs[d].kind in ("sfork", "frozen")]:
+    def _snapshot_movable_deps(self, parent: LogMeta, child: LogMeta) -> List[int]:
+        """Dependents of `parent` that must re-bind to a frozen pre-promote
+        copy: severed forks and frozen chains holding *positional* snapshots
+        of the old parent content, which a promote rewrites beyond the fork
+        point. A frozen splice stand-in that is the chain bottom of a live
+        cFork OTHER than the promoted child must NOT move: that fork inherits
+        continuously, so its future positions resolve through the live
+        parent's post-promote index (its sub-fp lookups are position-stable
+        either way). Only the promoted child's own chain bottom — which
+        references old-parent positions >= fp, exactly the ones being
+        re-sequenced — carries the old order."""
+        out = []
+        for d in parent.hli_children:
+            dm = self.logs[d]
+            if dm.kind == "sfork":
+                out.append(d)
+            elif dm.kind == "frozen":
+                sf = dm.stands_for
+                live_other = (sf is not None and sf != child.log_id
+                              and sf in self.logs and self.logs[sf].alive)
+                if not live_other:
+                    out.append(d)
+        return out
+
+    def _rebind_snapshot_deps(self, parent: LogMeta, frozen: LogMeta,
+                              child: LogMeta) -> None:
+        for dep in self._snapshot_movable_deps(parent, child):
             self.logs[dep].parent = frozen.log_id
             frozen.hli_children.add(dep)
             parent.hli_children.discard(dep)
@@ -490,9 +598,9 @@ class MetadataState:
         c_runs = self._collect_lineage_runs(child, parent.log_id, fp, child_tail)
         # severed/frozen dependents keep the old positional content: freeze a
         # zero-copy snapshot of the old index for them (copy mode rewrites
-        # positions beyond fp in place)
-        snapshot_deps = [d for d in parent.hli_children
-                         if self.logs[d].kind in ("sfork", "frozen")]
+        # positions beyond fp in place); live forks' chain bottoms stay on
+        # the live parent (continuous inheritance, see _snapshot_movable_deps)
+        snapshot_deps = self._snapshot_movable_deps(parent, child)
         if snapshot_deps:
             frozen_id = self._next_id
             self._next_id += 1
@@ -502,7 +610,7 @@ class MetadataState:
             self.logs[frozen_id] = frozen
             if parent.parent is not None:
                 self.logs[parent.parent].hli_children.add(frozen_id)
-            self._rebind_snapshot_deps(parent, frozen)
+            self._rebind_snapshot_deps(parent, frozen, child)
         old_runs = parent.index.runs()
         new_index = RunIndex()
         for r in old_runs:
@@ -553,36 +661,59 @@ class MetadataState:
         """Resolve [lo, hi) to byte spans through the HLI chain.
         Contiguous byte ranges are coalesced unless ``per_record``.
 
-        Fast path (DESIGN.md §10): while no log holds an active promotable
-        cFork, positions resolve through the memoized flattened view —
-        O(log runs) per lookup regardless of fork depth. With any hold active
-        the exact per-edge §4.1 blocking checks apply, via the iterative
-        chain resolver.
+        Fast path (DESIGN.md §10-§11): positions resolve through the
+        memoized flattened view — O(log runs) per lookup regardless of fork
+        depth — whenever no active promotable cFork lies on THIS log's
+        resolution lineage. Under a lineage hold, the view still serves the
+        §4.1-visible prefix (up to the memoized visibility ``cap``); only a
+        read crossing the cap is delegated to the exact blocking-aware chain
+        resolver, which raises the precise error in DFS order.
 
         Raises ForkBlocked if the range crosses an active promotable fork point
         that the reader is not entitled to see (§4.1).
         """
         meta = self._get(log_id)
-        if self.view_cache and not self._holders:
-            view = self._views.get(log_id)
-            if view is not None and view.version != self.structure_version:
-                view = None   # belt-and-braces vs the wholesale clear()
-            if view is None or hi > view.hi:
-                tail = self.tails.get(log_id)[0]
-                if not (0 <= lo <= hi <= tail):
-                    raise InvalidOperation(
-                        f"read [{lo},{hi}) out of range (tail {tail})")
-                view = self._view_for(meta, hi)
-            elif not (0 <= lo <= hi):
-                raise InvalidOperation(f"read [{lo},{hi}) out of range")
-            return self._view_spans(view, lo, hi, per_record)
         tail = self.tails.get(log_id)[0]
         if not (0 <= lo <= hi <= tail):
+            # explicit even when a view already covers `hi`: a restructure
+            # that shrank this log's range must never serve stale spans
             raise InvalidOperation(f"read [{lo},{hi}) out of range (tail {tail})")
+        if lo >= hi:
+            return []   # empty reads never resolve, block, or extend a view
+        if self.view_cache:
+            view = self._views.get(log_id)
+            if view is not None and view.version != self.structure_version:
+                self._drop_view(log_id)   # belt-and-braces vs wholesale clears
+                view = None
+            if view is None:
+                view = self._build_view(meta)   # one chain walk; cap memoizes on it
+            # note: sfork origin exempts only *ancestor* holds (_view_cap
+            # breaks its walk at the severed edge); the log's OWN promotable
+            # forks still cap it, exactly like the uncached viewing-log check
+            if (self._holders and not _skip_checks
+                    and not self._holders.isdisjoint(view.lineage)):
+                cap = self._view_cap(meta, view)
+                if cap is not None and hi > cap:
+                    # beyond the visible prefix: the exact resolver owns
+                    # the §4.1 error (or the rare allowed corner)
+                    return self._slow_spans(meta, lo, hi, _skip_checks,
+                                            per_record)
+                self.stats.capped_hits += 1
+            else:
+                self.stats.hits += 1
+            if hi > view.hi:
+                self._extend_view(meta, view, hi)
+            return self._view_spans(view, lo, hi, per_record)
+        return self._slow_spans(meta, lo, hi, _skip_checks, per_record)
+
+    def _slow_spans(self, meta: LogMeta, lo: int, hi: int,
+                    _skip_checks: bool, per_record: bool) -> List[Span]:
+        """The exact blocking-aware resolution (bounds already validated)."""
+        self.stats.slow_reads += 1
         if (not _skip_checks and hi > lo and self._holds(meta)
                 and hi > self._earliest_fp(meta)):
             raise ForkBlocked(
-                f"reads on log {log_id} beyond position {self._earliest_fp(meta)} "
+                f"reads on log {meta.log_id} beyond position {self._earliest_fp(meta)} "
                 "are blocked while a promotable cFork exists")
         out: List[Span] = []
         # reads originating on a severed fork reference positionally-committed
@@ -594,13 +725,100 @@ class MetadataState:
                       per_record=per_record)
         return out
 
-    # -- flattened-view fast path (DESIGN.md §10) ---------------------------
-    def _view_for(self, meta: LogMeta, hi: int) -> _FlatView:
-        """The log's flattened view, lazily extended to cover [0, hi)."""
-        view = self._views.get(meta.log_id)
-        if view is None or view.version != self.structure_version:
-            view = self._views[meta.log_id] = _FlatView(self.structure_version)
+    # -- flattened-view fast path (DESIGN.md §10-§11) -----------------------
+    def _lineage(self, meta: LogMeta) -> frozenset:
+        """The HLI parent chain of `meta` (inclusive): every log its reads can
+        resolve through. Stable for a view's lifetime — appends and new forks
+        never rebind existing parent pointers; promote/squash do, and they
+        drop the dependent views."""
+        chain = []
+        m: Optional[LogMeta] = meta
+        while m is not None:
+            chain.append(m.log_id)
+            m = self.logs.get(m.parent) if m.parent is not None else None
+        return frozenset(chain)
+
+    def _view_cap(self, meta: LogMeta, view: Optional[_FlatView]) -> Optional[int]:
+        """Largest ``hi`` this log may read without tripping a §4.1 check,
+        given the active holds on its lineage; ``None`` = unbounded (every
+        hold on the lineage is exempt for this reader — e.g. the promotable
+        child itself, which must read beyond the fork point to validate).
+
+        O(chain) metadata hops plus O(log n) tail queries, and *exact*: while
+        a hold on ancestor ``H`` (fork point ``fp``) is active, no log on a
+        non-exempt inheritance path below ``H`` can append, so the forbidden
+        positions of this log are precisely its top ``H.tail - fp`` ones —
+        ``cap = tail - (H.tail - fp)`` — an invariant under any ancestor's
+        concurrent appends (they advance both tails equally). Memoized on the
+        view per holds-epoch."""
+        if view is not None and view.cap_key == self.holds_version:
+            return view.cap
+        self.stats.cap_computes += 1
+        cap: Optional[int] = None
+        if self._holds(meta):
+            cap = self._earliest_fp(meta)
+        m = meta
+        while m.parent is not None:
+            if m.kind == "sfork":
+                if m is meta:
+                    # origin snapshot: the exact resolver exempts every edge
+                    # of a severed-fork-origin read (`via`), so ancestor
+                    # holds never apply — only the own-hold cap above does
+                    break
+                # severed edge mid-chain: the log above appends freely, so
+                # the tail-difference invariant breaks; and a hold whose fork
+                # point was transferred down by a promote CAN sit below this
+                # fork's inherited reach. If any live holder remains above,
+                # be conservative: delegate every non-empty read
+                a = m
+                holder_above = False
+                while a.parent is not None:
+                    pa = self.logs.get(a.parent)
+                    if pa is None:
+                        break
+                    if pa.alive and self._holds(pa):
+                        holder_above = True
+                        break
+                    a = pa
+                if holder_above:
+                    cap = 0
+                break
+            parent = self.logs.get(m.parent)
+            if parent is None:
+                break
+            exempt = (m.log_id in parent.promotable_forks
+                      or (m.stands_for is not None
+                          and m.stands_for in parent.promotable_forks))
+            if not exempt and parent.alive and self._holds(parent):
+                # meta is on a continuous-inheritance path below `parent`
+                # (severed edges are handled above): while the hold is
+                # active nothing on the path can append, so meta's forbidden
+                # positions are exactly its top `parent_tail - fp` ones —
+                # and concurrent appends by higher ancestors advance both
+                # tails equally, keeping `t` invariant
+                p_tail = self.tails.get(parent.log_id)[0]
+                t = (self.tails.get(meta.log_id)[0]
+                     - (p_tail - self._earliest_fp(parent)))
+                cap = t if cap is None else min(cap, t)
+            m = parent
+        if view is not None:
+            view.cap = cap
+            view.cap_key = self.holds_version
+        return cap
+
+    def _build_view(self, meta: LogMeta) -> _FlatView:
+        lineage = self._lineage(meta)
+        view = _FlatView(self.structure_version, lineage)
+        self._views[meta.log_id] = view
+        for lid in lineage:
+            self._view_deps.setdefault(lid, set()).add(meta.log_id)
+        self.stats.builds += 1
+        return view
+
+    def _extend_view(self, meta: LogMeta, view: _FlatView, hi: int) -> None:
+        """Lazily extend the flattened view to cover [0, hi)."""
         if hi > view.hi:
+            self.stats.extends += 1
             new = self._flatten_range(meta, view.hi, hi)
             # extension seam: if the first new entry continues the last
             # entry's run, merge them so span coalescing granularity is
@@ -615,7 +833,6 @@ class MetadataState:
                 view.los.append(entry[0])
                 view.entries.append(entry)
             view.hi = hi
-        return view
 
     def _flatten_range(self, meta: LogMeta, lo: int, hi: int
                        ) -> List[Tuple[int, int, object, int]]:

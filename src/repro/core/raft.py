@@ -35,10 +35,12 @@ class Replica:
         self.make_state = make_state
         self.state = make_state()
         self.log: List[_Entry] = []
-        self.commit_index = -1      # highest applied entry index
+        self.commit_index = -1      # highest COMMITTED entry index
+        self.applied_index = -1     # highest entry applied to the state machine
         self.snapshot_index = -1    # entries <= this are compacted into `snapshot`
         self.snapshot: Optional[bytes] = None
         self.alive = True
+        self.lazy_applies = 0       # entries applied via deferred batches
 
     def append_entry(self, entry: _Entry) -> bool:
         if not self.alive:
@@ -46,11 +48,15 @@ class Replica:
         self.log.append(entry)
         return True
 
+    @property
+    def pending_applies(self) -> int:
+        return self.commit_index - self.applied_index
+
     def apply_to(self, index: int) -> None:
         """Apply committed entries up to `index` (0-based global index)."""
-        while self.commit_index < index:
-            self.commit_index += 1
-            local = self.commit_index - self.snapshot_index - 1
+        while self.applied_index < index:
+            self.applied_index += 1
+            local = self.applied_index - self.snapshot_index - 1
             entry = self.log[local]
             try:
                 self.state.apply(entry.cmd)
@@ -59,8 +65,20 @@ class Replica:
                 # the state machine contract: every replica fails identically
                 # and the state is unchanged; the leader surfaces the error.
                 pass
+        if self.commit_index < index:
+            self.commit_index = index
+
+    def apply_pending(self) -> int:
+        """Drain the deferred-apply backlog (pipelined followers, DESIGN.md
+        §11): one sequential batch replay instead of per-proposal work."""
+        n = self.pending_applies
+        if n > 0:
+            self.lazy_applies += n
+            self.apply_to(self.commit_index)
+        return n
 
     def take_snapshot(self) -> None:
+        self.apply_pending()   # a snapshot serializes APPLIED state
         self.snapshot = pickle.dumps(self.state)
         drop = self.commit_index - self.snapshot_index
         self.log = self.log[drop:]
@@ -73,6 +91,7 @@ class Replica:
         self.snapshot = other.snapshot
         self.snapshot_index = other.snapshot_index
         self.commit_index = other.snapshot_index
+        self.applied_index = other.snapshot_index
         self.log = list(other.log)
         self.apply_to(other.commit_index)
 
@@ -81,7 +100,7 @@ class MetadataService:
     """Client-facing façade: propose() commands, query the leader's state."""
 
     def __init__(self, n_replicas: int = 3, snapshot_every: int = 0,
-                 **state_kwargs) -> None:
+                 pipeline_apply: bool = True, **state_kwargs) -> None:
         make_state = lambda: MetadataState(**state_kwargs)  # noqa: E731
         self.replicas = [Replica(i, make_state) for i in range(n_replicas)]
         self.term = 1
@@ -89,6 +108,12 @@ class MetadataService:
         self.snapshot_every = snapshot_every
         self._since_snapshot = 0
         self.proposals = 0
+        # Pipelined replica apply (DESIGN.md §11): followers only append the
+        # entry and advance their commit index on the propose critical path;
+        # the state-machine apply is deferred and batch-replayed on snapshot,
+        # failover, recovery, and convergence checks. With it off, every
+        # replica applies synchronously inside propose() (the seed behavior).
+        self.pipeline_apply = pipeline_apply
 
     # -- leadership ------------------------------------------------------------
     @property
@@ -122,6 +147,9 @@ class MetadataService:
         for r in alive:
             keep = winner.commit_index - r.snapshot_index
             r.log = r.log[:max(0, keep)]
+        # a pipelined follower stepping up must serve linearizable reads:
+        # drain its deferred-apply backlog before taking queries
+        winner.apply_pending()
 
     # -- the SMR write path ------------------------------------------------------
     def propose(self, cmd: Tuple, replica_hint: Optional[int] = None) -> object:
@@ -151,13 +179,19 @@ class MetadataService:
                 continue
             if r is self.leader:
                 # capture leader's apply result/error explicitly
-                while r.commit_index < index - 1:
+                if r.applied_index < index - 1:
                     r.apply_to(index - 1)
                 r.commit_index = index
+                r.applied_index = index
                 try:
                     result = r.state.apply(entry.cmd)
                 except Exception as e:  # deterministic command error
                     error = e
+            elif self.pipeline_apply:
+                # pipelined (DESIGN.md §11): the follower's durable vote is
+                # the log append above; advancing its commit index is all the
+                # critical path needs — the state-machine apply is deferred
+                r.commit_index = index
             else:
                 r.apply_to(index)
         self.proposals += 1
@@ -179,15 +213,28 @@ class MetadataService:
     def check_convergence(self) -> bool:
         """All alive replicas have identical applied state (test hook).
 
-        The digest covers live log ids AND per-log tails, so a replica that
-        diverged in *content* while agreeing on *membership* — e.g. by
-        replaying a batched append differently after a snapshot restore — is
-        caught, not just one that lost a whole log.
+        The digest covers membership, tails, AND per-log index-run content
+        (object ids + offsets/lengths, frozen stand-ins included): a replica
+        that replayed a promote splice differently but landed on the same
+        tails — same positions, different byte mapping — is caught, not just
+        one that lost a whole log. With pipelined apply, every replica's
+        deferred backlog is drained first: convergence is a statement about
+        applied state, not about queued entries.
         """
         def digest(state: MetadataState) -> bytes:
-            ids = state.live_log_ids()
-            return pickle.dumps([(lid, state.tails.get(lid)) for lid in ids])
+            items = []
+            for lid, m in sorted(state.logs.items()):
+                tails = state.tails.get(lid) if state.tails.contains(lid) else None
+                items.append((lid, m.kind, m.parent, m.fork_point, tails,
+                              m.stands_for, sorted(m.hli_children),
+                              sorted(m.promotable_forks.items()),
+                              m.index.content_digest()))
+            return pickle.dumps(items)
 
-        blobs = {digest(r.state)
-                 for r in self.replicas if r.alive and r.commit_index == self.leader.commit_index}
+        blobs = set()
+        for r in self.replicas:
+            if not (r.alive and r.commit_index == self.leader.commit_index):
+                continue
+            r.apply_pending()
+            blobs.add(digest(r.state))
         return len(blobs) <= 1

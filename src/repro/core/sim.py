@@ -101,17 +101,22 @@ class OpTally:
     bytes_put: int = 0
     gets: int = 0        # store GETs (ranged; post-cache, DESIGN.md §10)
     bytes_get: int = 0   # bytes actually fetched from the store
+    meta_cached: int = 0  # metadata resolutions served by a flattened view (§11)
+    meta_slow: int = 0    # resolutions through the exact chain resolver
 
     @classmethod
     def capture(cls, system, records: int = 0) -> "OpTally":
         """Snapshot a BoltSystem's counters (records is caller-supplied).
         Store backends without counters (e.g. FileObjectStore) report 0."""
+        view_stats = system.metadata.state.stats
         return cls(records=records,
                    proposals=system.metadata.proposals,
                    puts=getattr(system.store, "put_count", 0),
                    bytes_put=getattr(system.store, "bytes_written", 0),
                    gets=getattr(system.store, "get_count", 0),
-                   bytes_get=getattr(system.store, "bytes_read", 0))
+                   bytes_get=getattr(system.store, "bytes_read", 0),
+                   meta_cached=view_stats.cached_reads,
+                   meta_slow=view_stats.slow_reads)
 
     def delta(self, since: "OpTally") -> "OpTally":
         return OpTally(records=self.records - since.records,
@@ -119,7 +124,9 @@ class OpTally:
                        puts=self.puts - since.puts,
                        bytes_put=self.bytes_put - since.bytes_put,
                        gets=self.gets - since.gets,
-                       bytes_get=self.bytes_get - since.bytes_get)
+                       bytes_get=self.bytes_get - since.bytes_get,
+                       meta_cached=self.meta_cached - since.meta_cached,
+                       meta_slow=self.meta_slow - since.meta_slow)
 
     @property
     def proposals_per_record(self) -> float:
@@ -145,6 +152,8 @@ class ServiceTimes:
     disk_read_per_kb: float = 3e-6         # Kafka-like local disk
     disk_seek: float = 80e-6
     metadata_op: float = 12e-6             # sequencing round at metadata layer
+    metadata_op_cached: float = 4e-6       # lookup served by a flattened view
+                                           # (§11: bisect + slice, no chain walk)
     net_rtt: float = 60e-6
 
 

@@ -60,6 +60,7 @@ def _apply_random_ops(seed: int, n_ops: int, check_every: int = 1):
             # subtree order agreement on a sample
             x = rng.choice(live)
             assert ltt.subtree_ids(x) == oracle.subtree_ids(x)
+            assert ltt.direct_children(x) == oracle.direct_children(x)
     # final full check
     for l in live:
         assert ltt.get(l) == oracle.get(l)
@@ -91,6 +92,24 @@ def test_ltt_deep_chain():
     ltt.range_add(149, d_tail=1)
     assert ltt.get(151) == (13, 0)
     assert ltt.get(299) == (13, 0)
+
+
+def test_ltt_direct_children_skips_subtrees():
+    """direct_children must hop over grandchildren (promote re-parents only
+    the promoted node's immediate children, DESIGN.md §11)."""
+    ltt = LazyTailTree()
+    ltt.add_root(0)
+    ltt.add_child(0, 1, 0, 0)
+    ltt.add_child(1, 2, 0, 0)     # grandchild under 1
+    ltt.add_child(2, 3, 0, 0)     # great-grandchild
+    ltt.add_child(0, 4, 0, 0)
+    ltt.add_child(4, 5, 0, 0)
+    ltt.add_child(0, 6, 0, 0)
+    assert ltt.direct_children(0) == [1, 4, 6]
+    assert ltt.direct_children(1) == [2]
+    assert ltt.direct_children(3) == []
+    ltt.remove_node_keep_children(1)   # 2 re-parents to 0
+    assert ltt.direct_children(0) == [2, 4, 6]
 
 
 def test_ltt_wide_fanout():

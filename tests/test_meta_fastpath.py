@@ -1,0 +1,384 @@
+"""Hold-tolerant metadata fast path (DESIGN.md §11).
+
+The regime PR 2's suite could not exercise: with the old global gate the
+flattened-view cache turned OFF whenever any promotable cFork existed, so
+cached-vs-uncached comparisons under holds compared the slow path with
+itself. Now the cache stays engaged per lineage, so these tests assert both
+*correctness* (span-for-span equality with the exact resolver, including
+raised ForkBlocked, while holds are active) and *engagement* (the reads
+really were served from views, via ViewStats).
+"""
+
+import pickle
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.errors import AgileLogError, ForkBlocked, InvalidOperation
+from repro.core.metadata import MetadataState
+from repro.core.raft import MetadataService
+
+
+# ---------------------------------------------------------------------------
+# property suite: cached == uncached with promotable holds ACTIVE
+# ---------------------------------------------------------------------------
+
+class HoldingRunner:
+    """Like test_read_path.DualStateRunner, but biased so that promotable
+    holds are usually live while reads happen: high promotable-cFork rate,
+    deliberate reads on the holder, the promotable child, its descendants,
+    and unrelated sibling branches."""
+
+    def __init__(self, seed: int, promote_mode: str):
+        self.rng = random.Random(seed)
+        self.cached = MetadataState(view_cache=True, promote_mode=promote_mode)
+        self.plain = MetadataState(view_cache=False, promote_mode=promote_mode)
+        ra = self._both(("create_root", "r"))[0]
+        # a second topic: reads here must stay fast however many holds exist
+        rb = self._both(("create_root", "other-topic"))[0]
+        self.live = [ra, rb]
+        self.obj = 0
+
+    def _both(self, cmd):
+        res, errs = [], []
+        for state in (self.cached, self.plain):
+            try:
+                res.append(state.apply(cmd))
+                errs.append(None)
+            except AgileLogError as e:
+                res.append(None)
+                errs.append(type(e).__name__)
+        assert errs[0] == errs[1], f"error mismatch on {cmd}: {errs}"
+        assert res[0] == res[1], f"result mismatch on {cmd}: {res}"
+        return res[0], errs[0]
+
+    def _compare_reads(self, lid: int):
+        tail = self.plain.tail(lid)
+        lo = self.rng.randint(0, tail)
+        hi = self.rng.randint(lo, tail)
+        outs, errs = [], []
+        for state in (self.cached, self.plain):
+            try:
+                outs.append((state.read_spans(lid, lo, hi),
+                             state.read_record_spans(lid, lo, hi)))
+                errs.append(None)
+            except AgileLogError as e:
+                outs.append(None)
+                errs.append(type(e).__name__)
+        assert errs[0] == errs[1], \
+            f"read error mismatch on log {lid} [{lo},{hi}): {errs}"
+        assert outs[0] == outs[1], f"span mismatch on log {lid} [{lo},{hi})"
+
+    def step(self):
+        rng = self.rng
+        lid = rng.choice(self.live)
+        op = rng.random()
+        if op < 0.40:
+            k = rng.randint(1, 4)
+            sizes = [rng.randint(1, 64) for _ in range(k)]
+            offsets, off = [], 0
+            for s in sizes:
+                offsets.append(off)
+                off += s
+            self._both(("append", lid, f"o{self.obj}",
+                        tuple(offsets), tuple(sizes)))
+            self.obj += 1
+        elif op < 0.60:
+            # promotable-heavy: the whole point of this suite
+            self._both(("cfork", lid, rng.random() < 0.6))
+        elif op < 0.68:
+            past = None
+            tail = self.plain.tail(lid)
+            if tail > 0 and rng.random() < 0.5:
+                past = rng.randrange(tail)
+            self._both(("sfork", lid, past))
+        elif op < 0.76:
+            self._both(("promote", lid, rng.choice(["copy", "splice"])))
+        elif op < 0.82:
+            self._both(("squash", lid))
+        self.live = self.cached.live_log_ids()
+        assert self.live == self.plain.live_log_ids()
+        for _ in range(3):
+            self._compare_reads(rng.choice(self.live))
+
+
+@pytest.mark.parametrize("promote_mode", ["copy", "splice"])
+@given(seed=st.integers(min_value=0, max_value=100_000))
+@settings(max_examples=25, deadline=None)
+def test_cached_resolver_matches_plain_under_holds(promote_mode, seed):
+    runner = HoldingRunner(seed, promote_mode=promote_mode)
+    for _ in range(70):
+        runner.step()
+    for lid in runner.live:
+        for _ in range(4):
+            runner._compare_reads(lid)
+
+
+def test_hold_heavy_traces_actually_hit_the_cache():
+    """Meta-assertion for the suite above: across a handful of seeds the
+    cached state must serve a sizable share of reads from views (hits or
+    capped hits) even though promotable holds are active most of the time —
+    otherwise this suite would be comparing the slow path with itself, the
+    exact blind spot it exists to remove."""
+    cached = capped = slow = 0
+    for seed in range(8):
+        runner = HoldingRunner(seed, promote_mode="splice")
+        for _ in range(60):
+            runner.step()
+        stats = runner.cached.stats
+        cached += stats.cached_reads
+        capped += stats.capped_hits
+        slow += stats.slow_reads
+    assert capped > 0, "no read was ever served from a view under a lineage hold"
+    assert cached >= slow, f"cache mostly disengaged: {cached} vs {slow}"
+
+
+# ---------------------------------------------------------------------------
+# lineage scoping: holds elsewhere never disengage an unrelated log's cache
+# ---------------------------------------------------------------------------
+
+def _fill(state, log_id, n, tag, batch=64):
+    done = 0
+    while done < n:
+        k = min(batch, n - done)
+        state.apply(("append", log_id, f"{tag}-{done}",
+                     tuple(range(0, 8 * k, 8)), tuple([8] * k)))
+        done += k
+
+
+def test_sibling_branch_reads_stay_cached_under_hold():
+    state = MetadataState(view_cache=True)
+    root = state.apply(("create_root", "r"))
+    _fill(state, root, 64, "r")
+    a = state.apply(("cfork", root, False))       # agent branch
+    b = state.apply(("cfork", root, False))       # serving branch
+    _fill(state, a, 32, "a")
+    _fill(state, b, 32, "b")
+    state.read_spans(b, 0, 96)                    # warm b's view
+    hold = state.apply(("cfork", a, True))        # hold on the AGENT branch
+    assert state._holders == {a}
+    s0 = state.stats.slow_reads
+    h0 = state.stats.hits
+    for _ in range(5):
+        assert state.read_spans(b, 0, 96)         # b's lineage: {b, root}
+        assert state.read_spans(root, 0, 64)
+    assert state.stats.slow_reads == s0, \
+        "reads on a sibling branch fell back to the chain walk"
+    assert state.stats.hits >= h0 + 10
+    # the holder itself: visible prefix served from its (capped) view
+    c0 = state.stats.capped_hits
+    assert state.read_spans(a, 0, 96)             # fp is at tail: all visible
+    assert state.stats.capped_hits > c0
+    # the promotable child is entitled to read EVERYTHING, cached
+    _fill(state, a, 16, "hidden")                 # withheld parent appends
+    c1 = state.stats.capped_hits
+    assert state.read_spans(hold, 0, state.tail(hold))
+    assert state.stats.capped_hits > c1
+
+
+def test_holder_reads_beyond_fork_point_still_blocked():
+    state = MetadataState(view_cache=True)
+    root = state.apply(("create_root", "r"))
+    _fill(state, root, 16, "r")
+    state.read_spans(root, 0, 16)                 # warm the view past fp
+    state.apply(("cfork", root, True))            # fp = 16
+    _fill(state, root, 8, "withheld")
+    assert state.read_spans(root, 0, 16)          # visible prefix: cached
+    with pytest.raises(ForkBlocked):
+        state.read_spans(root, 0, 20)             # crosses fp: exact error
+    # descendants on the blocked lineage are capped identically
+    plain = MetadataState(view_cache=False)
+    plain.apply(("create_root", "r"))
+    _fill(plain, 0, 16, "r")
+    plain.apply(("cfork", 0, True))
+    _fill(plain, 0, 8, "withheld")
+    assert state.read_spans(root, 4, 12) == plain.read_spans(0, 4, 12)
+
+
+# ---------------------------------------------------------------------------
+# scoped invalidation
+# ---------------------------------------------------------------------------
+
+def test_promote_keeps_views_on_unrelated_logs():
+    state = MetadataState(view_cache=True, promote_mode="splice")
+    root = state.apply(("create_root", "r"))
+    _fill(state, root, 8, "r")
+    other = state.apply(("create_root", "other"))
+    _fill(state, other, 8, "o")
+    unrelated = [state.apply(("cfork", other, False)) for _ in range(4)]
+    for u in unrelated:
+        state.read_spans(u, 0, 8)                 # warm views on other topic
+    state.read_spans(root, 0, 8)
+    child = state.apply(("cfork", root, True))
+    state.apply(("append", child, "c", (0,), (8,)))
+    state.apply(("promote", child, "splice"))
+    assert root not in state._views, "promoted-into log's view must drop"
+    for u in unrelated:
+        assert u in state._views, "unrelated topic's views must survive promote"
+    # and the surviving views still serve exact spans
+    plain = MetadataState(view_cache=False)
+    plain.apply(("create_root", "r"))
+    _fill(plain, 0, 8, "o")                       # same content as `other`
+    got = state.read_record_spans(unrelated[0], 0, 8)
+    assert [s[0].split("-")[0] for s in got] == ["o"] * 8
+
+
+def test_squash_keeps_parent_and_sibling_views():
+    state = MetadataState(view_cache=True)
+    root = state.apply(("create_root", "r"))
+    _fill(state, root, 8, "r")
+    keeper = state.apply(("cfork", root, False))
+    victim = state.apply(("cfork", root, False))
+    state.read_spans(root, 0, 8)
+    state.read_spans(keeper, 0, 8)
+    state.read_spans(victim, 0, 8)
+    state.apply(("squash", victim))
+    assert victim not in state._views
+    assert root in state._views and keeper in state._views, \
+        "squash must only drop views through the removed subtree"
+    # the surviving views still resolve the same bytes as a fresh resolution
+    plain = MetadataState(view_cache=False)
+    plain.apply(("create_root", "r"))
+    _fill(plain, 0, 8, "r")
+    assert state.read_record_spans(keeper, 0, 8) == plain.read_record_spans(0, 0, 8)
+
+
+def test_stale_view_version_is_dropped_not_served():
+    """Belt-and-braces: a view whose version predates a wholesale clear is
+    discarded on next read even if it somehow survived in the dict."""
+    state = MetadataState(view_cache=True)
+    root = state.apply(("create_root", "r"))
+    _fill(state, root, 8, "r")
+    state.read_spans(root, 0, 8)
+    view = state._views[root]
+    state._invalidate_views()
+    state._views[root] = view                     # simulate a leak
+    assert state.read_spans(root, 0, 8)
+    assert state._views[root] is not view, "stale-version view must be rebuilt"
+
+
+def test_cached_read_checks_current_tail():
+    """Satellite regression (ISSUE 3): the old covered-view branch skipped
+    the `hi <= tail` bound, so any restructure that shrank a log's range
+    could serve stale spans from a wide view. Shrink the tail out from under
+    a built view and require InvalidOperation, not data."""
+    state = MetadataState(view_cache=True)
+    root = state.apply(("create_root", "r"))
+    _fill(state, root, 12, "r")
+    state.read_spans(root, 0, 12)                 # view covers [0, 12)
+    assert state._views[root].hi == 12
+    state.tails.range_add(root, d_tail=-4)        # simulate a shrinking splice
+    with pytest.raises(InvalidOperation):
+        state.read_spans(root, 0, 12)
+    with pytest.raises(InvalidOperation):
+        state.read_record_spans(root, 10, 11)
+    assert state.read_spans(root, 0, 8)           # in-range still served
+
+
+# ---------------------------------------------------------------------------
+# promote re-bind regression (pre-existing bug exposed by view extension)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("second_mode", ["copy", "splice"])
+def test_live_fork_chain_bottom_survives_parent_promote(second_mode):
+    """A live cFork whose own chain bottom is a frozen splice stand-in kept
+    inheriting from the root; promoting ANOTHER child of the root used to
+    re-bind that stand-in onto the root's position-capped pre-promote
+    snapshot, leaving the live fork with unresolvable (UnknownLog) positions
+    for everything the root appended afterwards."""
+    for view_cache in (False, True):              # plain resolver had it too
+        state = MetadataState(view_cache=view_cache, promote_mode="splice")
+        root = state.apply(("create_root", "r"))
+        state.apply(("append", root, "a", (0,), (8,)))
+        fork = state.apply(("cfork", root, False))          # live fork of root
+        inner = state.apply(("cfork", fork, True))
+        state.apply(("append", inner, "b", (0,), (8,)))
+        state.apply(("promote", inner, "splice"))  # fork -> frozen -> root
+        promo = state.apply(("cfork", root, True))
+        state.apply(("append", promo, "c", (0,), (8,)))
+        state.apply(("promote", promo, second_mode))
+        state.apply(("append", root, "d", (0,), (8,)))      # post-promote root data
+        tail = state.tail(fork)
+        spans = state.read_record_spans(fork, 0, tail)      # must not raise
+        assert [s[0] for s in spans] == ["a", "b", "c", "d"]
+        assert spans == [("a", 0, 8), ("b", 0, 8), ("c", 0, 8), ("d", 0, 8)]
+
+
+# ---------------------------------------------------------------------------
+# pipelined replica apply (raft)
+# ---------------------------------------------------------------------------
+
+def test_followers_defer_apply_until_forced():
+    svc = MetadataService(n_replicas=3, pipeline_apply=True)
+    root = svc.propose(("create_root", "r"))
+    for i in range(10):
+        svc.propose(("append", root, f"o{i}", (0,), (8,)))
+    followers = [r for r in svc.replicas if r is not svc.leader]
+    assert all(f.pending_applies == 11 for f in followers), \
+        "pipelined followers must not apply on the propose critical path"
+    assert all(f.commit_index == svc.leader.commit_index for f in followers)
+    assert svc.leader.pending_applies == 0
+    assert svc.check_convergence()                # forces the deferred batch
+    assert all(f.pending_applies == 0 for f in followers)
+    assert all(f.lazy_applies == 11 for f in followers)
+
+
+def test_sync_mode_preserves_seed_behavior():
+    svc = MetadataService(n_replicas=3, pipeline_apply=False)
+    root = svc.propose(("create_root", "r"))
+    svc.propose(("append", root, "o", (0,), (8,)))
+    assert all(r.pending_applies == 0 for r in svc.replicas)
+    assert svc.check_convergence()
+
+
+def test_failover_drains_backlog_before_serving():
+    svc = MetadataService(n_replicas=3, pipeline_apply=True)
+    root = svc.propose(("create_root", "r"))
+    for i in range(20):
+        svc.propose(("append", root, f"o{i}", (0, 8), (8, 8)))
+    old_leader = svc.leader_id
+    svc.fail_replica(old_leader)
+    assert svc.leader_id != old_leader
+    # the new leader must answer linearizable queries immediately
+    assert svc.state.tail(root) == 40
+    assert len(svc.state.read_spans(root, 0, 40)) >= 1
+    svc.propose(("append", root, "post", (0,), (8,)))
+    assert svc.state.tail(root) == 41
+
+
+def test_snapshot_forces_pending_applies():
+    svc = MetadataService(n_replicas=3, snapshot_every=5, pipeline_apply=True)
+    root = svc.propose(("create_root", "r"))
+    for i in range(9):
+        svc.propose(("append", root, f"o{i}", (0,), (8,)))
+    # snapshot_every=5 fired at least once: snapshots serialize APPLIED state
+    for r in svc.replicas:
+        assert r.snapshot_index >= 0
+        restored = pickle.loads(r.snapshot)
+        assert restored.tail(root) == r.snapshot_index  # root + k appends
+
+    victim = (svc.leader_id + 1) % 3
+    svc.fail_replica(victim)
+    for i in range(7):
+        svc.propose(("append", root, f"p{i}", (0,), (8,)))
+    svc.recover_replica(victim)
+    assert svc.replicas[victim].state.tail(root) == 16
+    assert svc.check_convergence()
+
+
+def test_convergence_digest_catches_content_divergence():
+    """Satellite regression (ISSUE 3): replicas agreeing on membership and
+    tails but differing in index-run CONTENT (a promote splice replayed
+    differently) must fail the convergence check."""
+    svc = MetadataService(n_replicas=3, pipeline_apply=True)
+    root = svc.propose(("create_root", "r"))
+    svc.propose(("append", root, "good", (0, 8), (8, 8)))
+    assert svc.check_convergence()
+    follower = next(r for r in svc.replicas if r is not svc.leader)
+    # corrupt one follower's byte mapping without touching its tail
+    run = follower.state.logs[root].index.runs()[0]
+    run.object_id = "evil"
+    assert follower.state.tails.get(root) == svc.leader.state.tails.get(root)
+    assert not svc.check_convergence(), \
+        "same tails + different content must not pass convergence"
