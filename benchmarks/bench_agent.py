@@ -1,0 +1,218 @@
+"""Speculation sessions vs the hand-rolled fork/validate/promote loop
+(DESIGN.md §12) — N agents committing against a hot producer.
+
+Scenario: one hot ``orders`` root takes a producer record every
+``PRODUCE_PERIOD`` seconds of *simulated* time while agents take turns
+running validate-then-commit sessions against it (validate = read the last
+``VALIDATE`` records of the fork; write = append a ``SUFFIX``-record batch;
+commit). Both paths execute REAL operations against one BoltSystem — every
+conflict comes from actual parent-tail advancement sequenced through the
+metadata layer, not from a probability model — while a deterministic clock
+books per-operation service times (:class:`ServiceTimes`) on the agent's
+critical path and "pumps" the producer forward whenever the clock advances
+(producer service time rides its own broker, §5.7, so only its *sequencing*
+is visible to the agents).
+
+The two client loops:
+
+* ``session``    — ``log.speculate()`` + ``commit()``: the conditional
+  ``promote_if`` closes the check-then-promote race in ONE proposal, and a
+  conflict rebases by replaying the suffix ZERO-COPY (metadata-only
+  re-appends of the already-durable segment) plus re-validating only the
+  parent's delta via ``on_rebase``.
+* ``handrolled`` — the pre-§12 client loop: cfork, full validation read,
+  append (a fresh object PUT every attempt), a tail-check round, a separate
+  promote round; on conflict squash and redo EVERYTHING. Records sequenced
+  between its tail check and its promote are merged unvalidated (counted as
+  ``tainted`` — the race ``promote_if`` exists to close).
+
+Acceptance (ISSUE 4): session commit throughput >= 2x hand-rolled under the
+contended producer. ``BENCH_QUICK=1`` shrinks the run ~4x for CI smoke.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import List
+
+from repro.core import BoltSystem, ConflictError
+from repro.core.sim import OpTally, ServiceTimes
+
+from .common import Row
+
+QUICK = os.environ.get("BENCH_QUICK", "") not in ("", "0")
+
+S = ServiceTimes()
+REC_BYTES = 256
+PRODUCE_PERIOD = 2.5e-3     # one producer record per 2.5ms of simulated time
+VALIDATE = 256              # records (re)read to validate an attempt
+SUFFIX = 8                  # records an agent commits per session
+N_AGENTS = 4
+MAX_ROUNDS = 12             # bound on promote attempts per commit, both paths
+
+PRODUCER_REC = b"o" * REC_BYTES
+AGENT_REC = b"s" * REC_BYTES
+
+
+class _AgentClock:
+    """Deterministic agent-side clock: each op advances simulated time by its
+    modeled service cost, then lets the producer catch up to the new time —
+    so contention emerges from real sequencing, at honest rates."""
+
+    def __init__(self, pump) -> None:
+        self.t = 0.0
+        self._pump = pump
+
+    def op(self, cost: float) -> None:
+        self.t += cost
+        self._pump(self.t)
+
+    def propose(self) -> None:
+        """One metadata round (cfork/squash/promote/promote_if/tail check)."""
+        self.op(S.metadata_op + S.net_rtt)
+
+    def put_append(self, nbytes: int) -> None:
+        """Data-plane append: broker CPU + object PUT + sequencing round."""
+        self.op(S.broker_cpu_per_req + S.broker_cpu_per_kb * nbytes / 1024
+                + S.store_put_base + S.store_put_per_kb * nbytes / 1024
+                + S.metadata_op + S.net_rtt)
+
+    def replay_append(self) -> None:
+        """Zero-copy re-append: sequencing round only, no PUT (§12)."""
+        self.op(S.broker_cpu_per_req + S.metadata_op + S.net_rtt)
+
+    def read(self, nbytes: int) -> None:
+        """Warm validation read: broker CPU on the bytes + cached metadata."""
+        self.op(S.broker_cpu_per_req + S.broker_cpu_per_kb * nbytes / 1024
+                + S.metadata_op_cached + S.net_rtt)
+
+
+def _run_mode(session: bool, n_commits: int) -> dict:
+    system = BoltSystem(n_brokers=N_AGENTS + 1)
+    root = system.create_log("orders")
+    # prefill so the validation window is always full
+    for start in range(0, VALIDATE * 2, 256):
+        root.append_batch([PRODUCER_REC] * 256)
+    produced = [0]
+
+    def pump(t: float) -> None:
+        want = int(t / PRODUCE_PERIOD)
+        while produced[0] < want:
+            root.append(PRODUCER_REC)    # withheld while a hold is active
+            produced[0] += 1
+
+    clock = _AgentClock(pump)
+    before = OpTally.capture(system)
+    produced_before = produced[0]
+    commits = conflicts = rebases = failures = tainted = 0
+    t0 = clock.t
+
+    def one_session() -> None:
+        nonlocal commits, conflicts, rebases, failures
+
+        def on_rebase(s, lo, hi):
+            # book what the rebase actually did: squash + cfork + one
+            # zero-copy replay of the suffix batch, then re-validate ONLY
+            # the parent's delta, then the retried promote_if round
+            clock.propose()
+            clock.propose()
+            clock.replay_append()
+            delta = s.read(lo, hi)
+            clock.read(sum(len(r) for r in delta))
+            clock.propose()
+            return True
+
+        clock.propose()                              # cfork round
+        s = root.speculate(max_rebases=MAX_ROUNDS - 1, on_rebase=on_rebase)
+        hi = s.tail
+        s.read(max(0, hi - VALIDATE), hi)            # full validation, once
+        clock.read(VALIDATE * REC_BYTES)
+        s.append_batch([AGENT_REC] * SUFFIX)
+        clock.put_append(SUFFIX * REC_BYTES)
+        clock.propose()                              # promote_if, attempt 1
+        try:
+            res = s.commit()
+            commits += 1
+            conflicts += res.attempts - 1
+            rebases += res.rebases
+        except ConflictError as e:                   # budget exhausted
+            conflicts += e.attempts
+            failures += 1
+
+    def one_handrolled() -> None:
+        nonlocal commits, conflicts, failures, tainted
+        for _attempt in range(MAX_ROUNDS):
+            clock.propose()                          # cfork round
+            fork = root.cfork(promotable=True)
+            info = system.metadata.state.fork_info(fork.log_id)
+            fp = info.fork_point
+            hi = fork.tail
+            fork.read(max(0, hi - VALIDATE), hi)     # FULL re-validation
+            clock.read(VALIDATE * REC_BYTES)
+            fork.append_batch([AGENT_REC] * SUFFIX)  # fresh PUT every attempt
+            clock.put_append(SUFFIX * REC_BYTES)
+            clock.propose()                          # tail-check round
+            if system.metadata.state.tail(root.log_id) > fp:
+                conflicts += 1
+                clock.propose()                      # squash round
+                fork.squash()
+                continue
+            produced_at_check = produced[0]
+            clock.propose()                          # promote round...
+            fork.promote()                           # ...the unclosable race:
+            tainted += produced[0] - produced_at_check   # merged unvalidated
+            commits += 1
+            return
+        failures += 1
+
+    while commits < n_commits:
+        for _agent in range(N_AGENTS):
+            if commits >= n_commits:
+                break
+            if session:
+                one_session()
+            else:
+                one_handrolled()
+
+    elapsed = clock.t - t0
+    tally = OpTally.capture(system).delta(before)
+    agent_puts = tally.puts - (produced[0] - produced_before)  # minus producer
+    return {
+        "us_per_commit": elapsed / max(1, commits) * 1e6,
+        "commits": commits, "conflicts": conflicts, "rebases": rebases,
+        "failures": failures, "tainted": tainted,
+        "produced": produced[0] - produced_before,
+        "agent_puts_per_commit": agent_puts / max(1, commits),
+        "replays": tally.replays, "spec_replayed": tally.spec_replayed,
+    }
+
+
+def bench_agent() -> List[Row]:
+    n_commits = 12 if QUICK else 48
+    ses = _run_mode(session=True, n_commits=n_commits)
+    hand = _run_mode(session=False, n_commits=n_commits)
+
+    rows: List[Row] = []
+    rows.append(("agent/session/us_per_commit", ses["us_per_commit"],
+                 f"{ses['commits']} commits, {ses['conflicts']} conflicts, "
+                 f"{ses['rebases']} rebases ({ses['spec_replayed']} records "
+                 f"replayed zero-copy), {ses['failures']} failures, "
+                 f"{ses['produced']} producer records contending"))
+    rows.append(("agent/handrolled/us_per_commit", hand["us_per_commit"],
+                 f"{hand['commits']} commits, {hand['conflicts']} conflicts "
+                 f"(full re-validation each), {hand['failures']} failures, "
+                 f"{hand['tainted']} records merged unvalidated (check/promote "
+                 f"race), {hand['produced']} producer records contending"))
+    speedup = hand["us_per_commit"] / ses["us_per_commit"]
+    rows.append(("agent/commit_tput/speedup", speedup,
+                 f"{speedup:.2f}x session vs hand-rolled (acceptance >= 2x)"))
+    rows.append(("agent/session/puts_per_commit", ses["agent_puts_per_commit"],
+                 f"vs {hand['agent_puts_per_commit']:.2f} hand-rolled: rebase "
+                 "replay re-sequences durable segments instead of re-PUTting"))
+    rows.append(("agent/handrolled/puts_per_commit",
+                 hand["agent_puts_per_commit"],
+                 "every conflict re-PUTs the suffix object"))
+    rows.append(("agent/session/rebases_per_commit",
+                 ses["rebases"] / max(1, ses["commits"]),
+                 f"{ses['replays']} zero-copy replay proposals total"))
+    return rows

@@ -36,7 +36,7 @@ def _run(group_commit: Optional[GroupCommitConfig]
             pending.append(out)
     system.flush()
     for p in pending:
-        assert p.result() is not None
+        assert p.positions() is not None
     elapsed = time.perf_counter() - start
     tally = OpTally.capture(system, records=N_RECORDS).delta(before)
     reads = [log.read(0, N_RECORDS // N_LOGS) for log in logs]

@@ -14,6 +14,7 @@ import json
 import sys
 import traceback
 
+from .bench_agent import bench_agent
 from .bench_agents import bench_agents
 from .bench_append import bench_append
 from .bench_cforks import bench_cfork_ablation, bench_many_cforks
@@ -39,6 +40,7 @@ ALL = [
     ("append_group_commit", bench_append),
     ("read_path", bench_read),
     ("meta_path", bench_meta),
+    ("agent_sessions", bench_agent),
     ("data_pipeline", bench_pipeline),
     ("roofline", bench_roofline),
 ]

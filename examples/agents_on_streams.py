@@ -60,3 +60,16 @@ ok = good.run_safe(validator)
 downstream = InventoryConsumer()
 downstream.process(orders)
 print("[supply-chain] promoted restock; inventory:", downstream.inventory)
+
+# ------------------------------------------- tailing subscription (DESIGN.md §12)
+# a downstream job follows the orders stream push-style: the committed
+# restock events arrive linearizably interleaved with the orders
+from repro.streams import Consumer  # noqa: E402
+
+follower = Consumer(orders, group="follower")
+kinds = {}
+for batch in follower.stream(follow=False):
+    for rec in batch:
+        kinds[rec["kind"]] = kinds.get(rec["kind"], 0) + 1
+follower.commit()
+print("[subscribe] drained", follower.offset, "records by kind:", kinds)

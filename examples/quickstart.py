@@ -1,23 +1,23 @@
-"""Quickstart: the AgileLog abstraction in 60 lines (paper §4.1, Fig. 2).
+"""Quickstart: the AgileLog abstraction + the agent-session API in 70 lines
+(paper §4.1 Fig. 2; DESIGN.md §12).
 
     PYTHONPATH=src python examples/quickstart.py
 """
 
-from repro.core import BoltSystem
+from repro.core import BoltSystem, ConflictError
 from repro.core.errors import ForkBlocked
 
 system = BoltSystem(n_brokers=4)
 log = system.create_log("orders")
 
-# 1. the traditional shared-log API
-for i in range(5):
-    log.append(f"order-{i}".encode())
+# 1. appends return unified receipts (per-call mode: resolved immediately)
+receipts = [log.append(f"order-{i}".encode()) for i in range(5)]
+print("positions:", [r.position() for r in receipts])
 print("root:", log.read(0, log.tail))
 
 # 2. continuous fork (Fig 2a/2b): inherits live appends, private writes
 agent_view = log.cfork()
 log.append(b"order-5")                      # lands on the parent...
-agent_view.log if False else None
 print("cfork sees parent append:", agent_view.read(5, 6))   # ...and the fork
 agent_view.append(b"agent-note")            # private to the fork
 print("parent tail:", log.tail, "| fork tail:", agent_view.tail)
@@ -26,24 +26,41 @@ print("parent tail:", log.tail, "| fork tail:", agent_view.tail)
 snapshot = log.sfork(past=2)
 print("sfork snapshot:", snapshot.read(0, snapshot.tail))
 
-# 4. promotable cFork: isolate -> validate -> promote (Fig 2e)
-candidate = log.cfork(promotable=True)
-candidate.append(b"restock-widget")
-log.append(b"order-6")                      # producers keep appending
-try:
-    log.read(0, log.tail)                   # ...but reads beyond fp block
-except ForkBlocked as e:
-    print("parent read blocked during validation:", type(e).__name__)
-# validation = read the fork: history + live orders + agent writes, interleaved
-print("validation view:", candidate.read(5, candidate.tail))
-candidate.promote()
-print("after promote:", log.read(5, log.tail))
+# 4. speculation session: the isolate -> validate -> promote loop (Fig 2e)
+#    as ONE primitive — commit() is atomic and auto-rebases if producers
+#    appended concurrently (replaying the speculative suffix zero-copy)
+with log.speculate() as s:
+    s.append(b"restock-widget")
+    r = log.append(b"order-6")              # producers keep appending...
+    print("producer position withheld during speculation:", r.withheld)
+    try:
+        log.read(0, log.tail)               # ...but reads beyond fp block
+    except ForkBlocked as e:
+        print("parent read blocked during validation:", type(e).__name__)
+    # validation = read the fork: history + live orders + agent writes
+    print("validation view:", s.read(5, s.tail))
+    result = s.commit()                     # conflict -> rebase -> retry
+    print(f"committed at {list(result.positions)} after "
+          f"{result.rebases} rebase(s)")
+print("after commit:", log.read(5, log.tail))
 
-# 5. exploration: many promotable forks, first promote wins
-a = log.cfork(promotable=True)
-b = log.cfork(promotable=True)
+# 5. exploration: competing speculations — first commit wins, the loser's
+#    commit raises ConflictError with fork-point diagnostics
+a = log.speculate(max_rebases=0)
+b = log.speculate(max_rebases=0)
 a.append(b"path-A")
 b.append(b"path-B")
-a.promote()                                 # b is squashed automatically
+a.commit()
+try:
+    b.commit()
+except ConflictError as e:
+    print("losing path rejected:", e)
 print("chosen path:", log.read(log.tail - 1, log.tail))
+
+# 6. tailing subscription: follow the stream push-style
+sub = log.subscribe(from_pos=0, batch=4, follow=False)
+for batch in sub:
+    print("subscription batch:", batch)
+log.append(b"order-7")
+print("next poll sees the new record:", sub.poll())
 print("metadata bytes:", system.metadata.state.metadata_bytes())

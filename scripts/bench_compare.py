@@ -5,17 +5,24 @@ Usage:
     python scripts/bench_compare.py BASE.json NEW.json \
         --key meta/lookup_hold/penalty/holds=4 \
         --key-up meta/proposals/speedup \
+        --key-min agent/commit_tput/speedup=2.0 \
         [--max-regress 0.25]
 
-``--key``    names a lower-is-better value (latencies, penalty ratios):
-             regression when new > base * (1 + max_regress).
-``--key-up`` names a higher-is-better value (speedups):
-             regression when new < base * (1 - max_regress).
+``--key``     names a lower-is-better value (latencies, penalty ratios):
+              regression when new > base * (1 + max_regress).
+``--key-up``  names a higher-is-better value (speedups):
+              regression when new < base * (1 - max_regress).
+``--key-min`` names an ABSOLUTE acceptance floor ``KEY=VALUE`` checked
+              against NEW alone (BASE not consulted): fails when
+              new < value. This is how a paper-style acceptance criterion
+              ("session commit throughput >= 2x hand-rolled", ISSUE 4) stays
+              enforced even if the committed baseline itself drifts.
 
 Keys may be given multiple times. A key missing from NEW fails (a renamed or
 dropped benchmark must update the CI wiring deliberately); a key missing from
 BASE is reported and skipped (first run after adding a benchmark). Exit code
-is 1 iff any named key regressed by more than ``--max-regress`` (default 25%).
+is 1 iff any named key regressed by more than ``--max-regress`` (default 25%)
+or undershot its ``--key-min`` floor.
 
 Ratio-style keys are the ones worth wiring into CI: they are dimensionless,
 so they stay comparable across machines, unlike absolute microseconds.
@@ -36,12 +43,25 @@ def main() -> int:
                     help="lower-is-better key to check (repeatable)")
     ap.add_argument("--key-up", action="append", default=[],
                     help="higher-is-better key to check (repeatable)")
+    ap.add_argument("--key-min", action="append", default=[],
+                    metavar="KEY=VALUE",
+                    help="absolute acceptance floor for a key in NEW "
+                         "(repeatable); fails when new < value")
     ap.add_argument("--max-regress", type=float, default=0.25,
                     help="allowed fractional regression (default 0.25)")
     args = ap.parse_args()
-    if not args.key and not args.key_up:
+    if not args.key and not args.key_up and not args.key_min:
         print("bench_compare: no keys named, nothing to check")
         return 0
+    floors = []
+    for spec in args.key_min:
+        key, sep, value = spec.rpartition("=")
+        try:
+            floors.append((key, float(value)))
+        except ValueError:
+            sep = ""
+        if not sep or not key:
+            ap.error(f"--key-min expects KEY=VALUE, got {spec!r}")
 
     with open(args.base) as f:
         base = json.load(f)
@@ -75,11 +95,26 @@ def main() -> int:
         if bad:
             failed.append(key)
 
+    for key, floor in floors:
+        checked += 1
+        if key not in new:
+            print(f"FAIL  {key}: missing from {args.new}")
+            failed.append(key)
+            continue
+        n = float(new[key])
+        bad = n < floor
+        print(f"{'FAIL' if bad else 'ok  '}  {key}: new={n:.3f} "
+              f"(acceptance floor {floor:.3f})")
+        if bad:
+            failed.append(key)
+
     if failed:
         print(f"bench_compare: {len(failed)} of {checked} checked keys "
-              f"regressed >{args.max_regress * 100:.0f}%: " + ", ".join(failed))
+              f"regressed >{args.max_regress * 100:.0f}% or undershot an "
+              "acceptance floor: " + ", ".join(failed))
         return 1
-    print(f"bench_compare: {checked} keys within {args.max_regress * 100:.0f}%")
+    print(f"bench_compare: {checked} keys within {args.max_regress * 100:.0f}% "
+          "and above all floors")
     return 0
 
 

@@ -1,12 +1,15 @@
-"""Supply-chain restocking agent (§6.8, Figure 14) — promotable cFork + promote.
+"""Supply-chain restocking agent (§6.8, Figure 14) — speculative commit.
 
 The stream carries `order` events from non-agentic producers; the agent
 evaluates demand and proactively writes `restock` events. In safe mode it
-writes to a *promotable cFork*, validates by running a stateful copy of the
-downstream inventory consumer on the fork (the fork contains previous records
-AND live non-agentic orders linearizably interleaved with the agent's writes —
-the stateful-validation story of §4.1), then promotes or squashes. In direct
-mode (the Kafka-style baseline) it writes straight to the main stream.
+opens a *speculation session* (DESIGN.md §12) — a promotable cFork under the
+hood — validates by running a stateful copy of the downstream inventory
+consumer on the speculative fork (which contains previous records AND live
+non-agentic orders linearizably interleaved with the agent's writes — the
+stateful-validation story of §4.1), then `commit()`s or `abort()`s; a commit
+that races a concurrent producer auto-rebases, re-validating the delta via
+the session's `on_rebase` hook. In direct mode (the Kafka-style baseline) it
+writes straight to the main stream.
 """
 
 from __future__ import annotations
@@ -14,6 +17,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List, Optional
 
+from ..core.errors import ConflictError
 from ..streams.records import decode_record, encode_record
 from ..streams.topics import Topic
 
@@ -89,28 +93,52 @@ class SupplyChainAgent:
             events.append(encode_record(rec))
         return events
 
-    # -- safe mode: promotable cFork + stateful validation + promote/squash -------
+    # -- safe mode: speculation session (validate -> commit/abort, §12) -----------
+    def _validates(self, validator_state: InventoryConsumer,
+                   fork_topic: Topic) -> bool:
+        """Stateful validation: run a COPY of the downstream consumer on the
+        speculative fork — it sees history + live orders + agent writes,
+        linearizably interleaved."""
+        probe = validator_state.snapshot()
+        try:
+            probe.process(fork_topic)
+            # the replay must not crash AND the restocked inventory must not
+            # end negative — the business invariant safe mode exists to hold
+            return all(v >= 0 for v in probe.inventory.values())
+        except Exception:
+            return False
+
     def run_safe(self, validator_state: InventoryConsumer) -> bool:
         decisions = self.decide()
         if not decisions:
             return False
-        fork = self.topic.cfork(promotable=True)
-        for ev in self._restock_events(decisions):
-            fork.log.append(ev)
-        # stateful validation: run a COPY of the downstream consumer on the
-        # fork — it sees history + live orders + agent writes, interleaved
-        probe = validator_state.snapshot()
-        try:
-            probe.process(fork)
-            valid = all(v >= 0 or True for v in probe.inventory.values())
-        except Exception:
-            valid = False
-        if valid:
-            fork.log.promote()
-            self.promotes += 1
-        else:
-            fork.log.squash()
-            self.squashes += 1
+
+        def revalidate(spec, lo, hi):
+            # a producer raced the commit: the rebase replayed our restocks;
+            # re-run the downstream probe over the rebased fork before the
+            # retried promote (delta [lo, hi) now sits below the fork point)
+            return self._validates(
+                validator_state,
+                Topic(f"{self.topic.name}/speculate", spec.log,
+                      self.topic.registry))
+
+        with self.topic.speculate(on_rebase=revalidate) as s:
+            s.append_batch(self._restock_events(decisions))
+            valid = self._validates(
+                validator_state,
+                Topic(f"{self.topic.name}/speculate", s.log, self.topic.registry))
+            if valid:
+                try:
+                    s.commit()
+                    self.promotes += 1
+                except ConflictError:
+                    # rebase budget exhausted or revalidation vetoed the
+                    # rebased state: the session already squashed itself
+                    self.squashes += 1
+                    valid = False
+            else:
+                s.abort()
+                self.squashes += 1
         return valid
 
     # -- direct mode (Kafka baseline): write straight to the main stream ---------

@@ -7,15 +7,19 @@ Layers (bottom-up):
   metadata    — the SMR state machine: forks, promote, squash, reads
   raft        — replicated metadata service (majority commit, failover)
   broker      — stateless brokers (append batching, object cache, DES hooks)
-  api         — the AgileLog interface (Fig. 1) + BoltSystem wiring
+  api         — the agent-session client API (receipts, speculation sessions,
+                tailing subscriptions — DESIGN.md §12) + BoltSystem wiring
   sim         — deterministic DES used by isolation benchmarks
 """
 
-from .api import AgileLog, BoltSystem
-from .broker import GroupCommitConfig, PendingAppend
-from .errors import AgileLogError, ForkBlocked, InvalidOperation, UnknownLog
+from .api import (AgileLog, AppendReceipt, BoltSystem, CommitResult,
+                  Speculation, Subscription)
+from .broker import GroupCommitConfig
+from .errors import (AgileLogError, ConflictError, ForkBlocked,
+                     InvalidOperation, UnknownLog)
 
 __all__ = [
-    "AgileLog", "BoltSystem", "GroupCommitConfig", "PendingAppend",
-    "AgileLogError", "ForkBlocked", "InvalidOperation", "UnknownLog",
+    "AgileLog", "AppendReceipt", "BoltSystem", "CommitResult", "Speculation",
+    "Subscription", "GroupCommitConfig", "AgileLogError", "ConflictError",
+    "ForkBlocked", "InvalidOperation", "UnknownLog",
 ]

@@ -1,16 +1,32 @@
-"""The AgileLog abstraction (Fig. 1) and the Bolt system wiring it together.
+"""The agent-session client API (DESIGN.md §12) over the Bolt system.
 
 ``BoltSystem`` owns the shared object store, a broker pool, and the replicated
-metadata service. ``AgileLog`` is the client handle implementing the paper's
-interface verbatim::
+metadata service. ``AgileLog`` is the client handle; it keeps the paper's
+Fig. 1 surface (append / read / cFork / sFork / promote / squash) but layers
+the three session primitives agents actually program against:
 
-    interface AgileLog:
-      Position append(Record r);
-      List<Record> read(Position from, Position to);
-      AgileLog cFork(promotable = false);
-      AgileLog sFork(optional Position past);
-      bool promote();
-      void squash();
+* **Unified receipts** — ``append``/``append_batch`` ALWAYS return an
+  :class:`AppendReceipt`: resolved immediately in per-call mode, at flush in
+  group-commit mode, with ``position()``/``positions()``/``wait()`` and the
+  §4.1 ``withheld`` state. The old mode-dependent
+  ``Union[Optional[int], PendingAppend]`` is gone; ``PendingAppend`` is a
+  broker-internal detail. A thin legacy shim (``result()``, ``==``/indexing
+  against raw positions) keeps pre-§12 callers running, with a
+  ``DeprecationWarning`` so CI can ban it in-tree.
+
+* **Speculation sessions** — ``log.speculate()`` wraps the paper's agentic
+  validate-then-commit loop (cFork → validate → promote-or-squash) into one
+  context-managed transaction: ``commit()`` promotes atomically via the
+  metadata layer's conditional ``promote_if`` and auto-rebases onto a fresh
+  cFork when the parent advanced, replaying the speculative suffix zero-copy
+  (the bytes are already durable — only metadata is re-sequenced); bounded
+  retries raise :class:`~repro.core.errors.ConflictError` with fork-point
+  diagnostics. ``abort()`` squashes (implicit on exception or unclosed exit).
+
+* **Tailing subscriptions** — ``log.subscribe(from_pos=...)`` yields record
+  batches as the visible tail advances: a cooperative poll-with-backoff
+  inside, push-shaped iteration outside. The streams layer's consumers are
+  built on it.
 
 Fork placement policy (§5.7): a fork is served by a broker *different from its
 parent's* (performance isolation) but forks of the same parent are co-located
@@ -18,21 +34,442 @@ parent's* (performance isolation) but forks of the same parent are co-located
 
 Group commit (DESIGN.md §9) is opt-in via ``BoltSystem(group_commit=...)``:
 ``True`` for defaults, an int for a record-count flush threshold, or a full
-:class:`~repro.core.broker.GroupCommitConfig`. With it on, ``append`` /
-``append_batch`` return :class:`~repro.core.broker.PendingAppend` handles that
-resolve at flush commit; ``BoltSystem.flush()`` (or leaving the system's
-``with`` block) commits all staged records, and reads of a staged log flush
-first, so read-your-writes is preserved. Default-off callers are unchanged.
+:class:`~repro.core.broker.GroupCommitConfig`. ``BoltSystem.flush()`` (or
+leaving the system's ``with`` block) commits all staged records;
+``AgileLog.flush()`` commits only this log's staged records; reads of a staged
+log flush first, so read-your-writes is preserved.
 """
 
 from __future__ import annotations
 
-from typing import Dict, Iterator, List, Optional, Sequence, Union
+import time
+import warnings
+from dataclasses import dataclass
+from typing import (Callable, Dict, Iterator, List, Optional, Sequence, Set,
+                    Union)
 
 from .broker import Broker, GroupCommitConfig, PendingAppend
-from .errors import InvalidOperation
+from .errors import AgileLogError, ConflictError, InvalidOperation, UnknownLog
 from .objectstore import MemoryObjectStore, ObjectStore
 from .raft import MetadataService
+from .sim import SpecStats
+
+
+def _legacy(old: str, new: str) -> None:
+    warnings.warn(
+        f"AppendReceipt.{old} is a pre-§12 compatibility shim; use {new} "
+        "instead (DESIGN.md §12, README migration table)",
+        DeprecationWarning, stacklevel=3)
+
+
+class AppendReceipt:
+    """Unified ack for one ``append``/``append_batch`` call (DESIGN.md §12).
+
+    One type for both append modes: in per-call mode the receipt is born
+    resolved; in group-commit mode it resolves when the owning broker's
+    staging buffer flushes. ``wait()`` forces resolution (flushing if
+    needed) and raises the append's deterministic error, if any — in
+    per-call mode that error already raised at the append call site.
+
+    ``positions()`` is ``None`` when the records committed but an active
+    promotable cFork withholds their positions (§4.1) — ``withheld`` spells
+    that state out.
+    """
+
+    __slots__ = ("_pending",)
+
+    def __init__(self, pending: PendingAppend) -> None:
+        self._pending = pending
+
+    # -- the new surface -----------------------------------------------------
+    @property
+    def count(self) -> int:
+        """How many records this receipt acknowledges."""
+        return self._pending.n
+
+    @property
+    def done(self) -> bool:
+        """Resolved yet? (Never forces a flush.)"""
+        return self._pending.done
+
+    def wait(self) -> "AppendReceipt":
+        """Force resolution: flush the owning broker if still staged, raise
+        the deterministic append error if there was one, return self."""
+        p = self._pending
+        if not p.done:
+            p.broker.flush()
+        if p._error is not None:
+            raise p._error
+        return self
+
+    def positions(self) -> Optional[List[int]]:
+        """All assigned positions (waits), or ``None`` when withheld (§4.1)."""
+        self.wait()
+        p = self._pending._positions
+        return None if p is None else list(p)
+
+    def position(self) -> Optional[int]:
+        """Position of the first record (waits); ``None`` when withheld."""
+        p = self.positions()
+        return None if p is None else p[0]
+
+    @property
+    def withheld(self) -> bool:
+        """True iff committed but positions are hidden by an active
+        promotable cFork on the appended log (§4.1). Waits."""
+        self.wait()
+        return self._pending._positions is None
+
+    def __repr__(self) -> str:
+        p = self._pending
+        state = ("staged" if not p.done
+                 else "failed" if p._error is not None
+                 else "withheld" if p._positions is None
+                 else f"positions={p._positions}")
+        return f"AppendReceipt(log={p.log_id}, n={p.n}, {state})"
+
+    # -- legacy shim (pre-§12 call sites; DeprecationWarning) ----------------
+    def result(self) -> Optional[List[int]]:
+        _legacy("result()", "wait()/positions()")
+        return self.positions()
+
+    def __eq__(self, other: object):
+        if isinstance(other, AppendReceipt):
+            return self is other
+        _legacy("== <raw positions>", "position()/positions()")
+        if other is None or isinstance(other, (list, tuple)):
+            p = self.positions()
+            return (p is None) if other is None else p == list(other)
+        if isinstance(other, int):
+            return self.position() == other
+        return NotImplemented
+
+    __hash__ = object.__hash__
+
+    def __getitem__(self, i: int) -> int:
+        _legacy("[...] indexing", "positions()")
+        p = self.positions()
+        if p is None:
+            raise TypeError("positions withheld by a promotable cFork (§4.1)")
+        return p[i]
+
+    def __iter__(self) -> Iterator[int]:
+        _legacy("iteration", "positions()")
+        p = self.positions()
+        return iter(p if p is not None else ())
+
+
+class Subscription:
+    """Tailing subscription over one log (DESIGN.md §12).
+
+    Push-shaped on the outside — ``for batch in log.subscribe(...)`` yields
+    lists of records in position order as the visible tail advances — and a
+    cooperative poll with exponential backoff on the inside. ``poll()`` is
+    the non-blocking single step (the streams-layer ``Consumer`` builds on
+    it); iteration wraps it:
+
+    * ``follow=False`` — drain mode: stop at the first poll that finds the
+      subscription caught up with the visible tail.
+    * ``follow=True``  — tail mode: on an idle poll call ``backoff(n_idle)``
+      (default: bounded exponential ``time.sleep``) and retry; an optional
+      ``max_idle`` bounds consecutive idle polls before stopping.
+
+    The cursor (``position``) only moves on delivery, so a subscription is
+    also an exact resume token; reads beyond a promotable hold surface the
+    usual §4.1 ``ForkBlocked`` rather than silently stalling.
+    """
+
+    def __init__(self, log: "AgileLog", from_pos: int = 0, batch: int = 1024,
+                 follow: bool = True, max_idle: Optional[int] = None,
+                 backoff: Optional[Callable[[int], None]] = None) -> None:
+        if batch <= 0:
+            raise InvalidOperation(f"subscribe batch must be positive, got {batch}")
+        if from_pos < 0:
+            raise InvalidOperation(f"subscribe from_pos must be >= 0, got {from_pos}")
+        self.log = log
+        self.position = from_pos
+        self.batch = batch
+        self.follow = follow
+        self.max_idle = max_idle
+        self._backoff = backoff if backoff is not None else self._default_backoff
+        self._idle = 0
+        self.polls = 0
+        self.idle_polls = 0
+        self.delivered = 0
+
+    @staticmethod
+    def _default_backoff(idle: int) -> None:
+        time.sleep(min(0.0005 * (1 << min(idle, 7)), 0.05))
+
+    def poll(self, max_records: Optional[int] = None) -> List[bytes]:
+        """One cooperative poll: up to ``max_records`` (default: ``batch``)
+        records at/after the cursor, ``[]`` when caught up. Never blocks."""
+        limit = self.batch if max_records is None else max_records
+        self.polls += 1
+        hi = min(self.log.visible_tail, self.position + limit)
+        if hi <= self.position:
+            self.idle_polls += 1
+            return []
+        records = self.log.read(self.position, hi)
+        self.position = hi
+        self.delivered += len(records)
+        return records
+
+    def __iter__(self) -> "Subscription":
+        self._idle = 0      # each iteration round gets a fresh idle budget
+        return self
+
+    def __next__(self) -> List[bytes]:
+        while True:
+            records = self.poll()
+            if records:
+                self._idle = 0
+                return records
+            if not self.follow:
+                raise StopIteration
+            self._idle += 1
+            if self.max_idle is not None and self._idle >= self.max_idle:
+                # reset so a resumed round (the cursor is a resume token)
+                # polls max_idle times again instead of stopping instantly
+                self._idle = 0
+                raise StopIteration
+            self._backoff(self._idle)
+
+
+@dataclass(frozen=True)
+class CommitResult:
+    """Outcome of a successful ``Speculation.commit()`` (DESIGN.md §12)."""
+
+    log_id: int          # the parent the suffix was committed into
+    base: int            # parent position the suffix starts at
+    count: int           # suffix records committed
+    attempts: int        # promote_if proposals issued (1 + rebases survived)
+    rebases: int         # auto-rebases performed over the session's lifetime
+    replayed: int        # records re-sequenced by those rebases (zero-copy)
+
+    @property
+    def positions(self) -> range:
+        """Final positions of the speculative suffix in the parent."""
+        return range(self.base, self.base + self.count)
+
+
+class Speculation:
+    """A speculative fork transaction (DESIGN.md §12) — the paper's agentic
+    validate-then-commit loop as one primitive.
+
+    Opening a speculation cForks the parent (promotable by default, which
+    holds the parent per §4.1: producers keep appending but positions are
+    withheld and non-exempt readers cap at the fork point). The handle
+    proxies ``append``/``append_batch`` (recording the speculative suffix),
+    ``read``/``scan``/``subscribe``/tails onto the fork, then:
+
+    * ``commit()`` proposes the metadata layer's atomic ``promote_if``. If
+      the parent advanced past what this session validated, the commit
+      **auto-rebases**: squash the stale fork, cFork afresh (the new fork
+      point now covers the parent's new records), replay the suffix
+      zero-copy (metadata-only re-appends of the already-durable bytes), and
+      re-propose — at most ``max_rebases`` times before raising
+      :class:`ConflictError` with the metadata layer's fork-point/tail
+      diagnostics. An optional ``on_rebase(spec, lo, hi)`` hook sees each
+      rebase with the parent's delta at fork positions ``[lo, hi)`` — return
+      ``False`` to veto (abort + ``ConflictError``). Losing a promote race
+      to a sibling speculation (the first promote squashes us) is handled
+      as a conflict too.
+    * ``abort()`` squashes the fork. Exiting the ``with`` block on an
+      exception — or without having committed — aborts implicitly: an
+      uncommitted speculation must not keep holding its parent.
+
+    Non-promotable speculations (``promotable=False``) are read/what-if
+    sandboxes: they never hold the parent and cannot ``commit()``.
+    """
+
+    def __init__(self, parent: "AgileLog", promotable: bool = True,
+                 dedicated: bool = False, max_rebases: int = 3,
+                 on_rebase: Optional[Callable[["Speculation", int, int],
+                                              Optional[bool]]] = None,
+                 mode: Optional[str] = None) -> None:
+        self.parent = parent
+        self.promotable = promotable
+        self.max_rebases = max_rebases
+        self.on_rebase = on_rebase
+        self._dedicated = dedicated
+        self._mode = mode
+        self._stats: SpecStats = parent.system.spec_stats
+        self._stats.sessions += 1
+        self.log: AgileLog = parent.cfork(promotable=promotable,
+                                          dedicated=dedicated)
+        self._base = self._info().fork_point
+        self._suffix: List[AppendReceipt] = []
+        self._state = "open"          # open | committed | aborted
+        self.rebases = 0
+        self.replayed = 0
+
+    # -- proxied log surface -------------------------------------------------
+    def _info(self):
+        return self.parent.system.metadata.state.fork_info(self.log.log_id)
+
+    def _require_open(self) -> None:
+        if self._state != "open":
+            raise InvalidOperation(f"speculation already {self._state}")
+
+    def append(self, record: bytes) -> AppendReceipt:
+        self._require_open()
+        receipt = self.log.append(record)
+        self._suffix.append(receipt)
+        return receipt
+
+    def append_batch(self, records: Sequence[bytes]) -> AppendReceipt:
+        self._require_open()
+        receipt = self.log.append_batch(records)
+        self._suffix.append(receipt)
+        return receipt
+
+    def read(self, lo: int, hi: int) -> List[bytes]:
+        return self.log.read(lo, hi)
+
+    def scan(self, lo: int = 0, hi: Optional[int] = None,
+             batch: int = 1024) -> Iterator[bytes]:
+        return self.log.scan(lo, hi, batch)
+
+    def subscribe(self, **kwargs) -> Subscription:
+        return self.log.subscribe(**kwargs)
+
+    @property
+    def tail(self) -> int:
+        return self.log.tail
+
+    @property
+    def fork_point(self) -> int:
+        """Parent position the CURRENT fork branched at (moves on rebase)."""
+        return self._base
+
+    @property
+    def parent_advanced(self) -> int:
+        """Parent records sequenced since the current fork point — what a
+        ``commit()`` right now would have to rebase over."""
+        self.parent._sync()
+        return self._info().advanced
+
+    @property
+    def suffix_len(self) -> int:
+        return sum(r.count for r in self._suffix)
+
+    # -- transaction ---------------------------------------------------------
+    def commit(self, mode: Optional[str] = None) -> CommitResult:
+        """Promote the speculation atomically; auto-rebase on conflict."""
+        self._require_open()
+        mode = mode if mode is not None else self._mode
+        system = self.parent.system
+        for receipt in self._suffix:
+            receipt.wait()           # surface deferred append errors first
+        attempts = 0
+        while True:
+            attempts += 1
+            self.log._sync()         # sequence any still-staged suffix records
+            try:
+                outcome = system.metadata.propose(
+                    ("promote_if", self.log.log_id, self._base, mode))
+            except UnknownLog:
+                # a sibling speculation promoted first and squashed us (§4.1
+                # first-promote-wins): same client-visible story as a
+                # parent-advanced conflict — rebase onto the merged parent
+                outcome = ("conflict", None)
+            if outcome[0] == "ok":
+                base, count = outcome[1]
+                self._state = "committed"
+                self._stats.commits += 1
+                return CommitResult(log_id=self.parent.log_id, base=base,
+                                    count=count, attempts=attempts,
+                                    rebases=self.rebases,
+                                    replayed=self.replayed)
+            diag = outcome[1] or {}
+            self._stats.conflicts += 1
+            if attempts > self.max_rebases:
+                self._abort(squash=True)
+                why = (f"parent {diag['log_id']} advanced {diag['advanced']} "
+                       f"records past the validated tail {self._base}"
+                       if diag else
+                       f"a sibling speculation promoted first into parent "
+                       f"{self.parent.log_id}")
+                raise ConflictError(
+                    f"speculative commit lost to {attempts} conflict(s) "
+                    f"(max_rebases={self.max_rebases}): {why}",
+                    log_id=diag.get("log_id", self.parent.log_id),
+                    fork_id=diag.get("fork_id"),
+                    fork_point=diag.get("fork_point", self._base),
+                    parent_tail=diag.get("parent_tail"),
+                    expected=diag.get("expected", self._base),
+                    advanced=diag.get("advanced", 0),
+                    attempts=attempts,
+                    holds_epoch=diag.get("holds_epoch"))
+            old_base = self._base
+            self._rebase()
+            if self.on_rebase is not None:
+                if self.on_rebase(self, old_base, self._base) is False:
+                    self._abort(squash=True)
+                    raise ConflictError(
+                        "on_rebase validation rejected the parent's delta "
+                        f"[{old_base},{self._base})",
+                        log_id=self.parent.log_id, fork_point=self._base,
+                        expected=old_base, advanced=self._base - old_base,
+                        attempts=attempts)
+
+    def _rebase(self) -> None:
+        """Squash the stale fork, cFork at the parent's new tail, and replay
+        the speculative suffix ZERO-COPY: the records are already durable in
+        shared storage (each receipt carries its segment reference), so the
+        replay is one metadata proposal per original append — no object PUT,
+        no payload bytes moved (DESIGN.md §12)."""
+        segments = [r._pending.segment for r in self._suffix
+                    if r._pending.segment is not None and r.count > 0]
+        try:
+            self.log.squash()
+        except AgileLogError:
+            pass                      # already squashed by the winning sibling
+        self.log = self.parent.cfork(promotable=self.promotable,
+                                     dedicated=self._dedicated)
+        self._base = self._info().fork_point
+        replayed: List[AppendReceipt] = []
+        n = 0
+        for object_id, offsets, lengths in segments:
+            pending = self.log._b().replay(self.log.log_id, object_id,
+                                           offsets, lengths)
+            replayed.append(AppendReceipt(pending))
+            n += len(offsets)
+        self._suffix = replayed
+        self.rebases += 1
+        self.replayed += n
+        self._stats.rebases += 1
+        self._stats.replayed_records += n
+
+    def abort(self) -> None:
+        """Squash the speculation; idempotent once the session is closed."""
+        if self._state == "open":
+            self._abort(squash=True)
+
+    def _abort(self, squash: bool) -> None:
+        self._state = "aborted"
+        self._stats.aborts += 1
+        if squash:
+            try:
+                self.log.squash()
+            except AgileLogError:
+                pass                  # fork already gone (lost promote race)
+
+    # -- context manager -----------------------------------------------------
+    def __enter__(self) -> "Speculation":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        # an uncommitted speculation must not outlive its block: it would
+        # keep holding the parent (§4.1) with nobody left to resolve it
+        if self._state == "open":
+            self.abort()
+
+    def __repr__(self) -> str:
+        return (f"Speculation(parent={self.parent.log_id}, "
+                f"fork={self.log.log_id}, base={self._base}, "
+                f"suffix={self.suffix_len}, state={self._state})")
 
 
 class BoltSystem:
@@ -72,6 +509,8 @@ class BoltSystem:
                         for i in range(max(2, n_brokers))]
         self._fork_broker: Dict[int, int] = {}   # parent log -> broker for its forks
         self._next_broker = 1
+        self._dead: Set[int] = set()             # failed broker ids
+        self.spec_stats = SpecStats()            # session counters (§12)
 
     # -- group commit (DESIGN.md §9) ------------------------------------------------
     def flush(self) -> None:
@@ -102,14 +541,13 @@ class BoltSystem:
         pass, fall back to an explicit search over every other live broker
         (including broker 0) before giving up and co-locating."""
         n = len(self.brokers)
-        dead = getattr(self, "_dead", set())
         for _ in range(max(1, n - 1)):
             b = self._next_broker
             self._next_broker = (self._next_broker % (n - 1)) + 1
-            if b != parent_broker and b not in dead:
+            if b != parent_broker and b not in self._dead:
                 return b
         for b in range(n):
-            if b != parent_broker and b not in dead:
+            if b != parent_broker and b not in self._dead:
                 return b
         return parent_broker   # degenerate: no other live broker exists
 
@@ -134,7 +572,6 @@ class BoltSystem:
         stateless — §5.2 — so reassignment is metadata-free; the object cache
         and any *unflushed* group-commit staging — records that were never
         acked — are the only loss)."""
-        self._dead = getattr(self, "_dead", set())
         self._dead.add(broker_id)
         self.brokers[broker_id].discard_staging()
         for parent, b in list(self._fork_broker.items()):
@@ -142,17 +579,17 @@ class BoltSystem:
                 del self._fork_broker[parent]
 
     def live_broker(self, preferred: Broker) -> Broker:
-        dead = getattr(self, "_dead", set())
-        if preferred.broker_id not in dead:
+        if preferred.broker_id not in self._dead:
             return preferred
         for b in self.brokers:
-            if b.broker_id not in dead:
+            if b.broker_id not in self._dead:
                 return b
         raise RuntimeError("no live brokers")
 
 
 class AgileLog:
-    """Client handle for one log (root or fork). Figure 1's interface."""
+    """Client handle for one log (root or fork): Figure 1's interface plus
+    the §12 session primitives (receipts, speculate, subscribe)."""
 
     def __init__(self, system: BoltSystem, log_id: int, broker: Broker) -> None:
         self.system = system
@@ -176,25 +613,22 @@ class AgileLog:
         b._flush_if_staged(self.log_id)
         return b
 
-    def append(self, record: bytes) -> Union[Optional[int], PendingAppend]:
-        """Per-call mode: returns the assigned position (None when withheld,
-        §4.1). Group-commit mode: stages the record and returns a
-        :class:`PendingAppend` — ``result()[0]`` after flush is the position."""
-        if self.system.group_commit is not None:
-            return self._b().stage(self.log_id, [record])
-        positions, _ = self._b().append(self.log_id, [record])
-        return None if positions is None else positions[0]
+    def append(self, record: bytes) -> AppendReceipt:
+        """Append one record; always returns an :class:`AppendReceipt` —
+        resolved immediately in per-call mode (deterministic errors raise
+        here), at flush in group-commit mode (errors raise at ``wait()``)."""
+        return AppendReceipt(self._b().submit(self.log_id, [record]))
 
-    def append_batch(self, records: Sequence[bytes]
-                     ) -> Union[Optional[List[int]], PendingAppend]:
-        if self.system.group_commit is not None:
-            return self._b().stage(self.log_id, list(records))
-        positions, _ = self._b().append(self.log_id, list(records))
-        return positions
+    def append_batch(self, records: Sequence[bytes]) -> AppendReceipt:
+        """Append a batch atomically; one receipt covering every record."""
+        return AppendReceipt(self._b().submit(self.log_id, list(records)))
 
     def flush(self) -> None:
-        """Commit this log's broker staging buffer (group commit, DESIGN.md §9)."""
-        self._b().flush()
+        """Commit this log's staged records (group commit, DESIGN.md §9).
+        Only flushes the broker staging buffer if records of THIS log are in
+        it — other logs' staged batches keep accumulating. Use
+        ``BoltSystem.flush()`` for the global flush."""
+        self._b()._flush_if_staged(self.log_id)
 
     def read(self, lo: int, hi: int) -> List[bytes]:
         records, _ = self._b().read_records(self.log_id, lo, hi)
@@ -231,6 +665,16 @@ class AgileLog:
             yield from records
             pos = chunk_hi
 
+    def subscribe(self, from_pos: int = 0, batch: int = 1024,
+                  follow: bool = True, max_idle: Optional[int] = None,
+                  backoff: Optional[Callable[[int], None]] = None
+                  ) -> Subscription:
+        """Tailing subscription from ``from_pos`` (DESIGN.md §12): iterate
+        for batches as the visible tail advances, or drive it one
+        ``poll()`` at a time."""
+        return Subscription(self, from_pos=from_pos, batch=batch,
+                            follow=follow, max_idle=max_idle, backoff=backoff)
+
     @property
     def tail(self) -> int:
         self._sync()
@@ -255,6 +699,20 @@ class AgileLog:
         broker = self.system._broker_for_fork(self.log_id, self.broker.broker_id,
                                               dedicated)
         return AgileLog(self.system, child_id, broker)
+
+    def speculate(self, promotable: bool = True, dedicated: bool = False,
+                  max_rebases: int = 3,
+                  on_rebase: Optional[Callable[[Speculation, int, int],
+                                               Optional[bool]]] = None,
+                  mode: Optional[str] = None) -> Speculation:
+        """Open a speculative fork transaction against this log
+        (DESIGN.md §12): ``with log.speculate() as s: ... s.commit()``."""
+        if promotable is False and on_rebase is not None:
+            raise InvalidOperation(
+                "on_rebase only applies to promotable speculations")
+        return Speculation(self, promotable=promotable, dedicated=dedicated,
+                           max_rebases=max_rebases, on_rebase=on_rebase,
+                           mode=mode)
 
     def promote(self, mode: Optional[str] = None) -> bool:
         self._sync()

@@ -55,9 +55,16 @@ class PendingAppend:
     committed yet, then returns the assigned positions (or ``None`` when an
     active promotable cFork withholds them, §4.1) or raises the deterministic
     error the metadata layer produced for this log.
+
+    ``segment`` is set when the records become durable: the
+    ``(object_id, offsets, lengths)`` triple locating this append's bytes in
+    shared storage. The session layer's rebase replay (DESIGN.md §12) re-
+    sequences those already-durable records through :meth:`Broker.replay`
+    without ever re-PUTting them. This is a broker-internal type — clients
+    see :class:`~repro.core.api.AppendReceipt`.
     """
 
-    __slots__ = ("broker", "log_id", "n", "done", "done_time",
+    __slots__ = ("broker", "log_id", "n", "done", "done_time", "segment",
                  "_positions", "_error")
 
     def __init__(self, broker: "Broker", log_id: int, n: int) -> None:
@@ -66,6 +73,7 @@ class PendingAppend:
         self.n = n
         self.done = False
         self.done_time = 0.0
+        self.segment: Optional[Tuple[str, Tuple[int, ...], Tuple[int, ...]]] = None
         self._positions: Optional[List[int]] = None
         self._error: Optional[Exception] = None
 
@@ -115,6 +123,7 @@ class Broker:
         self.cpu = Resource(servers=1)
         self.store_resource = store_resource
         self.appends = 0
+        self.replays = 0
         self.reads = 0
 
     # -- data path ----------------------------------------------------------------
@@ -122,6 +131,13 @@ class Broker:
                arrival: Optional[float] = None) -> Tuple[Optional[List[int]], float]:
         """Returns (positions-or-None, completion_time). positions is None when
         an active promotable cFork hides them (§4.1)."""
+        positions, done, _segment = self._append_now(log_id, records, arrival)
+        return positions, done
+
+    def _append_now(self, log_id: int, records: Sequence[bytes],
+                    arrival: Optional[float]):
+        """One PUT + one metadata proposal; also returns the durable segment
+        reference so receipts can support zero-copy replay (DESIGN.md §12)."""
         object_id = f"obj-{self.broker_id}-{next(_obj_counter)}"
         payload = b"".join(records)
         offsets, lengths, off = [], [], 0
@@ -129,12 +145,46 @@ class Broker:
             offsets.append(off)
             lengths.append(len(r))
             off += len(r)
+        segment = (object_id, tuple(offsets), tuple(lengths))
         self.store.put(object_id, payload)
-        positions = self.metadata.propose(
-            ("append", log_id, object_id, tuple(offsets), tuple(lengths)))
+        positions = self.metadata.propose(("append", log_id) + segment)
         self.appends += 1
         done = self._book(arrival, write_bytes=len(payload))
-        return positions, done
+        return positions, done, segment
+
+    def submit(self, log_id: int, records: Sequence[bytes],
+               arrival: Optional[float] = None) -> PendingAppend:
+        """The ONE staging-aware append entry point (DESIGN.md §12): stages
+        under group commit, appends immediately otherwise — either way the
+        caller gets a :class:`PendingAppend` (already resolved on the
+        immediate path). Deterministic errors on the immediate path raise
+        here, at the call site, exactly as the pre-§12 ``append`` did."""
+        if self.group_commit is not None:
+            return self.stage(log_id, records, arrival)
+        positions, done, segment = self._append_now(log_id, records, arrival)
+        pending = PendingAppend(self, log_id, len(records))
+        pending.segment = segment
+        pending._resolve(positions, done)
+        return pending
+
+    def replay(self, log_id: int, object_id: str, offsets: Sequence[int],
+               lengths: Sequence[int],
+               arrival: Optional[float] = None) -> PendingAppend:
+        """Zero-copy re-append (DESIGN.md §12): sequence records that are
+        ALREADY durable in shared storage — a rebase replays a speculative
+        suffix as one metadata proposal per original append, with no object
+        PUT and no payload bytes touched. Bypasses the group-commit staging
+        deliberately: there is no payload to stage, and replay happens on a
+        commit path that needs the positions sequenced now."""
+        segment = (object_id, tuple(offsets), tuple(lengths))
+        positions = self.metadata.propose(("append", log_id) + segment)
+        self.appends += 1
+        self.replays += 1
+        done = self._book(arrival)
+        pending = PendingAppend(self, log_id, len(segment[1]))
+        pending.segment = segment
+        pending._resolve(positions, done)
+        return pending
 
     # -- group-commit staging (DESIGN.md §9) ---------------------------------------
     def stage(self, log_id: int, records: Sequence[bytes],
@@ -192,6 +242,10 @@ class Broker:
         self.flushes += 1
         done = self._book(arrival, write_bytes=len(payload))
         for pending, entry_index, start in slices:
+            _lid, e_offs, e_lens = entries[entry_index]
+            pending.segment = (object_id,
+                               tuple(e_offs[start:start + pending.n]),
+                               tuple(e_lens[start:start + pending.n]))
             outcome = outcomes[entry_index]
             if outcome[0] == "ok":
                 pending._resolve(outcome[1][start:start + pending.n], done)

@@ -17,5 +17,29 @@ class InvalidOperation(AgileLogError):
     """Semantically invalid call (e.g. squash of a root log, promote of an sFork)."""
 
 
+class ConflictError(AgileLogError):
+    """A speculative commit could not be sequenced (DESIGN.md §12).
+
+    Raised by ``Speculation.commit()`` when the bounded auto-rebase budget is
+    exhausted (the parent kept advancing, or a sibling speculation won the
+    promote race), or when an ``on_rebase`` validation hook rejects the
+    rebased state. Carries the metadata layer's fork-point/tail diagnostics
+    so the caller can see exactly how far the parent ran ahead.
+    """
+
+    def __init__(self, msg: str, *, log_id=None, fork_id=None, fork_point=None,
+                 parent_tail=None, expected=None, advanced=0, attempts=0,
+                 holds_epoch=None) -> None:
+        super().__init__(msg)
+        self.log_id = log_id            # the parent (commit target)
+        self.fork_id = fork_id          # the speculative cFork
+        self.fork_point = fork_point    # fork point of the last attempt
+        self.parent_tail = parent_tail  # parent tail the metadata layer saw
+        self.expected = expected        # parent tail the speculation validated
+        self.advanced = advanced        # records sequenced past `expected`
+        self.attempts = attempts        # promote attempts (1 + rebases)
+        self.holds_epoch = holds_epoch  # metadata holds_version at the check
+
+
 class NotLeader(AgileLogError):
     """Metadata proposal sent to a non-leader replica."""

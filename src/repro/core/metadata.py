@@ -63,6 +63,28 @@ class LogMeta:
         return self.kind != "frozen"
 
 
+@dataclass(frozen=True)
+class ForkInfo:
+    """Fork-point diagnostics for one log (DESIGN.md §12).
+
+    The client session layer uses this to decide whether a speculation's
+    parent advanced (``advanced > 0``) and to stamp :class:`ConflictError`
+    diagnostics. ``holds_epoch`` is the metadata layer's ``holds_version``
+    at query time — the same epoch counter that memoizes §11 visibility
+    caps — so two observations with equal epochs saw identical hold state.
+    """
+
+    log_id: int
+    kind: str                    # 'root' | 'cfork' | 'sfork'
+    parent: Optional[int]        # promote target (LTT parent for cForks)
+    fork_point: int
+    promotable: bool
+    tail: int
+    parent_tail: Optional[int]   # None for roots / severed-from-dead parents
+    advanced: int                # parent records sequenced past the fork point
+    holds_epoch: int
+
+
 class _FlatView:
     """Memoized flattened resolution of one log's view (DESIGN.md §10-§11).
 
@@ -492,6 +514,44 @@ class MetadataState:
         self._gc_frozen()
         return True
 
+    def _apply_promote_if(self, child_id: int, expected_parent_tail: int,
+                          mode: Optional[str] = None) -> Tuple:
+        """Conditional promote — the linearization point of a speculative
+        commit (DESIGN.md §12). Promotes ``child_id`` only if its parent's
+        tail is still ``<= expected_parent_tail`` (i.e. nothing was sequenced
+        into the parent past what the speculation validated); otherwise it
+        mutates NOTHING and returns the conflict diagnostics as a value.
+
+        Because this runs as one SMR command, check and promote are atomic in
+        consensus order — the hand-rolled tail-check-then-promote loop cannot
+        close this race (records sequenced between its two proposals are
+        merged unvalidated). Outcomes, deterministic on every replica:
+
+        * ``("ok", (base, count))`` — promoted; the speculative suffix landed
+          at parent positions ``[base, base + count)``.
+        * ``("conflict", {..})``    — parent advanced; diagnostics carry the
+          fork point, observed/expected tails, and the holds epoch.
+
+        Ineligible children (non-promotable, unknown — e.g. squashed by a
+        sibling's winning promote) raise the usual deterministic errors.
+        """
+        child = self._get(child_id)
+        if not child.promotable or child.kind != "cfork":
+            raise InvalidOperation("only promotable cForks can be committed (§4.1)")
+        parent = self._get(child.ltt_parent)
+        p_tail = self.tails.get(parent.log_id)[0]
+        if p_tail > expected_parent_tail:
+            return ("conflict", {
+                "log_id": parent.log_id, "fork_id": child_id,
+                "fork_point": child.fork_point, "parent_tail": p_tail,
+                "expected": expected_parent_tail,
+                "advanced": p_tail - expected_parent_tail,
+                "holds_epoch": self.holds_version,
+            })
+        count = self.tails.get(child_id)[0] - p_tail
+        self._apply_promote(child_id, mode)
+        return ("ok", (p_tail, count))
+
     def _promote_splice(self, parent: LogMeta, child: LogMeta) -> None:
         """O(1)-metadata: parent adopts child's index; the old parent index is
         frozen as an internal HLI stand-in (beyond-paper; DESIGN.md §4.2).
@@ -646,6 +706,24 @@ class MetadataState:
         if self._holds(meta):
             return min(tail, self._earliest_fp(meta))
         return tail
+
+    def fork_info(self, log_id: int) -> ForkInfo:
+        """Fork-point epoch exposure (DESIGN.md §12): where this log forked,
+        how far its promote target has run ahead, and the holds epoch."""
+        meta = self._get(log_id)
+        tail = self.tails.get(log_id)[0]
+        target = meta.ltt_parent if meta.kind == "cfork" else meta.parent
+        p_tail: Optional[int] = None
+        advanced = 0
+        if target is not None:
+            pm = self.logs.get(target)
+            if pm is not None and pm.alive:
+                p_tail = self.tails.get(target)[0]
+                advanced = max(0, p_tail - meta.fork_point)
+        return ForkInfo(log_id=log_id, kind=meta.kind, parent=target,
+                        fork_point=meta.fork_point, promotable=meta.promotable,
+                        tail=tail, parent_tail=p_tail, advanced=advanced,
+                        holds_epoch=self.holds_version)
 
     def _lookup_one(self, log_id: int, pos: int) -> Span:
         spans = self.read_spans(log_id, pos, pos + 1, _skip_checks=True)

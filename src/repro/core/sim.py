@@ -87,13 +87,31 @@ class Resource:
 
 
 @dataclass
+class SpecStats:
+    """Speculation-session counters (DESIGN.md §12), one instance per
+    BoltSystem. The session layer bumps these as it runs; ``OpTally.capture``
+    snapshots them alongside the data-/metadata-plane counters so benchmarks
+    can report commit/conflict/rebase rates and replay amortization (a rebase
+    replays its suffix as metadata-only re-appends — zero object PUTs)."""
+
+    sessions: int = 0          # Speculation handles opened
+    commits: int = 0           # successful commit() calls
+    aborts: int = 0            # abort() calls (explicit, implicit, or failed)
+    conflicts: int = 0         # promote_if conflicts (incl. lost promote races)
+    rebases: int = 0           # auto-rebases performed
+    replayed_records: int = 0  # suffix records re-sequenced by rebases
+
+
+@dataclass
 class OpTally:
     """Cross-plane operation counters for amortization accounting (DESIGN.md §9).
 
     Group commit's whole point is fewer metadata proposals and object PUTs
     *per appended record*; this tally snapshots both planes around a workload
-    so benchmarks report the ratio directly.
-    """
+    so benchmarks report the ratio directly. The §12 session fields measure
+    the speculative-commit path the same way: ``replays`` counts zero-copy
+    re-appends (metadata-only — if rebases show up in ``puts`` instead,
+    replay stopped being zero-copy)."""
 
     records: int = 0
     proposals: int = 0
@@ -103,12 +121,17 @@ class OpTally:
     bytes_get: int = 0   # bytes actually fetched from the store
     meta_cached: int = 0  # metadata resolutions served by a flattened view (§11)
     meta_slow: int = 0    # resolutions through the exact chain resolver
+    replays: int = 0      # zero-copy re-appends (rebase replay, §12)
+    spec_conflicts: int = 0   # speculative commit conflicts (§12)
+    spec_rebases: int = 0     # auto-rebases (§12)
+    spec_replayed: int = 0    # suffix records re-sequenced by rebases (§12)
 
     @classmethod
     def capture(cls, system, records: int = 0) -> "OpTally":
         """Snapshot a BoltSystem's counters (records is caller-supplied).
         Store backends without counters (e.g. FileObjectStore) report 0."""
         view_stats = system.metadata.state.stats
+        spec = getattr(system, "spec_stats", None) or SpecStats()
         return cls(records=records,
                    proposals=system.metadata.proposals,
                    puts=getattr(system.store, "put_count", 0),
@@ -116,7 +139,12 @@ class OpTally:
                    gets=getattr(system.store, "get_count", 0),
                    bytes_get=getattr(system.store, "bytes_read", 0),
                    meta_cached=view_stats.cached_reads,
-                   meta_slow=view_stats.slow_reads)
+                   meta_slow=view_stats.slow_reads,
+                   replays=sum(getattr(b, "replays", 0)
+                               for b in getattr(system, "brokers", [])),
+                   spec_conflicts=spec.conflicts,
+                   spec_rebases=spec.rebases,
+                   spec_replayed=spec.replayed_records)
 
     def delta(self, since: "OpTally") -> "OpTally":
         return OpTally(records=self.records - since.records,
@@ -126,7 +154,11 @@ class OpTally:
                        gets=self.gets - since.gets,
                        bytes_get=self.bytes_get - since.bytes_get,
                        meta_cached=self.meta_cached - since.meta_cached,
-                       meta_slow=self.meta_slow - since.meta_slow)
+                       meta_slow=self.meta_slow - since.meta_slow,
+                       replays=self.replays - since.replays,
+                       spec_conflicts=self.spec_conflicts - since.spec_conflicts,
+                       spec_rebases=self.spec_rebases - since.spec_rebases,
+                       spec_replayed=self.spec_replayed - since.spec_replayed)
 
     @property
     def proposals_per_record(self) -> float:

@@ -1,17 +1,19 @@
 """Topics, producers, consumer groups, schemas, and stream processors.
 
-A Topic wraps one AgileLog. Consumers track offsets (committable through the
-metadata layer's object store so restarts resume exactly). A StreamProcessor
-is the classic stateful consumer: tumbling-window aggregation, which the
-stream-processor-testing agent (§6.8) exercises on cForks.
+A Topic wraps one AgileLog. Consumers are built on the session layer's
+tailing subscriptions (DESIGN.md §12) — the log's Subscription owns the
+cursor; `commit` persists it through the object store so restarts resume
+exactly. A StreamProcessor is the classic stateful consumer: tumbling-window
+aggregation, which the stream-processor-testing agent (§6.8) exercises on
+cForks.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Iterator, List, Optional, Tuple
 
-from ..core.api import AgileLog, BoltSystem
+from ..core.api import AgileLog, AppendReceipt, BoltSystem, Speculation
 from .records import decode_record, encode_record
 
 
@@ -74,6 +76,11 @@ class Topic:
         return Topic(f"{self.name}/sfork", self.log.sfork(past, dedicated),
                      self.registry)
 
+    def speculate(self, **kwargs) -> Speculation:
+        """Open a speculative fork transaction on this topic's log
+        (DESIGN.md §12); wrap ``spec.log`` in a Topic to run consumers on it."""
+        return self.log.speculate(**kwargs)
+
     @property
     def tail(self) -> int:
         return self.log.tail
@@ -90,7 +97,9 @@ class Producer:
         self._buf: List[bytes] = []
         self.produced = 0
 
-    def produce(self, rec: Dict[str, Any]) -> Optional[int]:
+    def produce(self, rec: Dict[str, Any]) -> Optional[AppendReceipt]:
+        """Buffer one record; returns the batch's AppendReceipt when this
+        record triggered a flush, else None."""
         if self.validate and self.topic.registry:
             schema = self.topic.registry.get(self.topic.name.split("/")[0])
             if schema:
@@ -101,33 +110,43 @@ class Producer:
             return self.flush()
         return None
 
-    def flush(self) -> Optional[int]:
+    def flush(self) -> Optional[AppendReceipt]:
         if not self._buf:
             return None
-        positions = self.topic.log.append_batch(self._buf)
+        receipt = self.topic.log.append_batch(self._buf)
         self._buf.clear()
-        return None if positions is None else positions[-1]
+        return receipt
 
 
 class Consumer:
-    """Offset-tracking consumer. `poll` returns up to `max_records` decoded
-    records; `commit` persists the offset so a restarted consumer resumes
-    exactly (the log position IS the resume cursor)."""
+    """Offset-tracking consumer, built on a tailing Subscription
+    (DESIGN.md §12): the subscription owns the cursor, `poll` is one
+    cooperative non-blocking step, `stream` iterates decoded batches
+    push-style, and `commit` persists the cursor so a restarted consumer
+    resumes exactly (the log position IS the resume cursor)."""
 
     def __init__(self, topic: Topic, group: str = "default",
                  start: int = 0) -> None:
         self.topic = topic
         self.group = group
-        self.offset = start
+        self._sub = topic.log.subscribe(from_pos=start, batch=256)
         self.committed = start
 
+    @property
+    def offset(self) -> int:
+        return self._sub.position
+
     def poll(self, max_records: int = 256) -> List[Dict[str, Any]]:
-        hi = min(self.topic.log.visible_tail, self.offset + max_records)
-        if hi <= self.offset:
-            return []
-        raw = self.topic.log.read(self.offset, hi)
-        self.offset = hi
-        return [decode_record(b) for b in raw]
+        return [decode_record(b) for b in self._sub.poll(max_records)]
+
+    def stream(self, follow: bool = False, max_idle: Optional[int] = None
+               ) -> Iterator[List[Dict[str, Any]]]:
+        """Iterate decoded batches: drain to the visible tail
+        (``follow=False``) or keep tailing with backoff (``follow=True``)."""
+        self._sub.follow = follow
+        self._sub.max_idle = max_idle
+        for batch in self._sub:
+            yield [decode_record(b) for b in batch]
 
     def commit(self) -> None:
         key = f"__offsets/{self.topic.log.log_id}/{self.group}"
@@ -172,8 +191,7 @@ class StreamProcessor:
         self.errors: List[str] = []
         self.seen_keys: set = set()
 
-    def step(self, max_records: int = 256) -> int:
-        recs = self.consumer.poll(max_records)
+    def _ingest(self, recs: List[Dict[str, Any]]) -> None:
         for rec in recs:
             try:
                 ts = rec["ts"]
@@ -191,6 +209,10 @@ class StreamProcessor:
                 if not self.guard:
                     raise
                 self.errors.append(f"{type(e).__name__}: {e}")
+
+    def step(self, max_records: int = 256) -> int:
+        recs = self.consumer.poll(max_records)
+        self._ingest(recs)
         return len(recs)
 
     def close_windows(self, watermark_ts: float) -> List[WindowResult]:
@@ -210,6 +232,8 @@ class StreamProcessor:
         return out
 
     def run_to_tail(self) -> None:
-        while self.step() > 0:
-            pass
+        """Drain the input subscription to the visible tail, then close all
+        windows (push-shaped: batches arrive from the consumer's stream)."""
+        for recs in self.consumer.stream(follow=False):
+            self._ingest(recs)
         self.close_windows(float("inf"))

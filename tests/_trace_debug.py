@@ -23,7 +23,7 @@ def run(seed, cf_mode="ltt", promote_mode="copy", n=60, verbose=True):
                 recs = [f"r{runner.rec_counter + j}".encode() for j in range(k)]
                 runner.rec_counter += k
                 desc = f"append({lid},k={k})"
-                b, o, err = runner._both(lambda: h.append_batch(recs),
+                b, o, err = runner._both(lambda: h.append_batch(recs).positions(),
                                          lambda: runner.oracle.append(lid, recs))
                 if err is None:
                     assert b == o, f"positions {b} vs {o}"

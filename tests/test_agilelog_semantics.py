@@ -50,7 +50,7 @@ class TraceRunner:
             k = rng.randint(1, 3)
             recs = [f"r{self.rec_counter + i}".encode() for i in range(k)]
             self.rec_counter += k
-            b, o, err = self._both(lambda: h.append_batch(recs),
+            b, o, err = self._both(lambda: h.append_batch(recs).positions(),
                                    lambda: self.oracle.append(lid, recs))
             if err is None:
                 assert b == o, f"append positions mismatch: {b} vs {o}"
@@ -156,7 +156,7 @@ def test_naive_cf_variant_short_trace():
         r = rng.random()
         if r < 0.5:
             recs = [f"n{i}".encode()]
-            assert h.append_batch(recs) == oracle.append(lid, recs)
+            assert h.append_batch(recs).positions() == oracle.append(lid, recs)
         elif r < 0.7:
             b = h.cfork()
             o = oracle.cfork(lid, False)

@@ -45,7 +45,7 @@ def test_multi_log_flush_is_one_proposal_one_put():
     assert delta.proposals == 1
     assert delta.puts == 1
     for j, tag in enumerate("abc"):
-        positions = [p.result() for p in pending[j::3]]
+        positions = [p.positions() for p in pending[j::3]]
         assert positions == [[i] for i in range(8)]
         assert logs[j].read(0, 8) == [REC(tag, i) for i in range(8)]
 
@@ -61,7 +61,7 @@ def test_positions_match_per_call_path():
         want.append(log1.append(REC("r", i)))
         got.append(log2.append(REC("r", i)))
     grouped.flush()
-    assert [p.result()[0] for p in got] == want
+    assert [p.positions()[0] for p in got] == [w.position() for w in want]
     for lo, hi in [(a1, a2), (b1, b2)]:
         assert hi.read(0, hi.tail) == lo.read(0, lo.tail)
 
@@ -78,7 +78,7 @@ def test_flush_thresholds_and_context_manager():
         assert p3.done                               # byte flush
         p4 = log.append(b"tail")
     assert p4.done                                   # context-exit flush
-    assert p4.result() == [5]
+    assert p4.positions() == [5]
 
 
 def test_read_flushes_staged_records():
@@ -110,13 +110,13 @@ def test_des_time_deadline_flushes_old_batch():
     assert p3.result() == [2]
 
 
-def test_pending_result_forces_flush():
+def test_receipt_wait_forces_flush():
     system = BoltSystem(group_commit=GroupCommitConfig(max_records=1000))
     log = system.create_log("x")
-    pending = log.append(b"r")
-    assert not pending.done
-    assert pending.result() == [0]   # result() flushes the owning broker
-    assert pending.done
+    receipt = log.append(b"r")
+    assert not receipt.done
+    assert receipt.positions() == [0]   # positions() waits: flushes the broker
+    assert receipt.done
 
 
 def test_metadata_ops_flush_staged_records():
@@ -136,7 +136,7 @@ def test_failed_broker_discards_staging():
     p = log.append(b"lost")
     system.fail_broker(0)
     with pytest.raises(AgileLogError):
-        p.result()                           # never acked -> failed, not committed
+        p.wait()                             # never acked -> failed, not committed
     system.flush()
     assert system.metadata.state.tail(log.log_id) == 0
 
@@ -153,11 +153,11 @@ def test_flush_failure_fails_pendings_and_recovers():
     with pytest.raises(RuntimeError):
         system.flush()
     with pytest.raises(AgileLogError):
-        p.result()
+        p.wait()
     system.metadata.recover_replica(1)
     p2 = log.append(b"r")
     system.flush()
-    assert p2.result() == [0]           # nothing from the failed flush leaked
+    assert p2.positions() == [0]        # nothing from the failed flush leaked
     assert log.tail == 1
     assert system.metadata.check_convergence()
 
@@ -181,7 +181,7 @@ def test_batch_withholds_positions_under_promotable_cfork():
     child = root.cfork(promotable=True)
     p = root.append(b"hidden")
     system.flush()
-    assert p.result() is None                    # §4.1: withheld, not lost
+    assert p.withheld and p.positions() is None  # §4.1: withheld, not lost
     assert root.tail == 2
     child.promote()
     assert root.read(0, 2) == [b"base", b"hidden"]
@@ -199,9 +199,9 @@ def test_batch_entry_errors_are_isolated_and_deterministic():
     p_blocked = sibling.append(b"nope")
     p_free = free.append(b"yep")
     system.flush()
-    assert p_free.result() == [0]
+    assert p_free.positions() == [0]
     with pytest.raises(ForkBlocked):
-        p_blocked.result()
+        p_blocked.wait()
     # every replica applied the partial batch identically
     assert system.metadata.check_convergence()
 
@@ -258,11 +258,11 @@ def test_group_commit_read_equivalent_to_per_record(trace):
     for which, k, flush_roll in trace:
         records = [REC("t", counter + j) for j in range(k)]
         counter += k
-        want = logs1[which].append_batch(records)
+        want = logs1[which].append_batch(records).positions()
         pending = logs2[which].append_batch(records)
         if flush_roll == 0:
             grouped.flush()
-            assert pending.result() == want
+            assert pending.positions() == want
     grouped.flush()
     for l1, l2 in zip(logs1, logs2):
         assert l1.tail == l2.tail

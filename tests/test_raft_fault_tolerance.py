@@ -53,7 +53,7 @@ def test_no_quorum_proposal_rolls_back_and_recovers():
     with pytest.raises(RuntimeError):
         log.append(b"never-committed")
     sys.metadata.recover_replica(1)
-    assert log.append(b"first-real") == 0
+    assert log.append(b"first-real").position() == 0
     assert log.read(0, 1) == [b"first-real"]
     assert sys.metadata.check_convergence()
 

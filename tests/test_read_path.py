@@ -12,7 +12,7 @@ import random
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import BoltSystem
+from repro.core import BoltSystem, ForkBlocked, UnknownLog
 from repro.core.broker import Broker, GroupCommitConfig
 from repro.core.errors import AgileLogError
 from repro.core.metadata import MetadataState
@@ -346,3 +346,83 @@ def test_scan_snapshots_tail_at_start():
     log.append(b"late")
     rest = list(it)
     assert first + rest == [b"%d" % i for i in range(10)]  # no 'late'
+
+
+# --------------------- scan iterators vs concurrent promote/squash (ISSUE 4)
+# A scan() resolves metadata PER BATCH (DESIGN.md §10), so a promote/squash
+# of the scanned lineage mid-iteration is observed at the next batch
+# boundary, never inside a batch. These tests pin the observed semantics.
+
+def test_scan_crossing_concurrent_promote_observes_the_merge():
+    """Scanning a non-promotable sibling fork while its parent's promotable
+    cFork promotes mid-iteration: batches fetched BEFORE the promote see the
+    pre-promote prefix; batches fetched AFTER resolve through the promoted
+    lineage — re-sequenced positions beyond the fork point now carry the
+    winner's suffix, then the parent's withheld records. No error, no torn
+    batch, no position yielded twice."""
+    system = BoltSystem(n_brokers=3, promote_mode="splice")
+    root = system.create_log("root")
+    pre = [b"p%d" % i for i in range(10)]
+    root.append_batch(pre)
+    sib = root.cfork()                      # scans this; inherits continuously
+    cand = root.cfork(promotable=True)      # fork point 10
+    cand.append_batch([b"a0", b"a1"])       # child-local: positions 10, 11
+    root.append_batch([b"w0", b"w1", b"w2"])   # withheld; the child inherits
+    # them at 12-14, but the SIBLING holds them (blocked) at 10-12 pre-promote
+    it = sib.scan(0, 13, batch=4)
+    got = [next(it) for _ in range(4)]      # [0,4): below the cap, served
+    cand.promote()                          # restructures the scanned lineage
+    got += list(it)                         # [4,13): post-promote resolution
+    assert got == pre + [b"a0", b"a1", b"w0"]
+    # the same post-promote content, scanned from scratch, agrees
+    assert list(sib.scan(0, 13)) == got
+
+
+def test_scan_beyond_hold_cap_raises_at_the_crossing_batch():
+    """Without the promote, the same mid-scan crossing hits the §4.1 block:
+    bounds validate eagerly against the TAIL at scan() time, but the hold is
+    enforced per batch — the iterator yields the visible prefix, then raises
+    ForkBlocked at the first batch crossing the fork point."""
+    system = BoltSystem(n_brokers=3)
+    root = system.create_log("root")
+    root.append_batch([b"p%d" % i for i in range(10)])
+    sib = root.cfork()
+    root.cfork(promotable=True)             # active hold, fork point 10
+    root.append_batch([b"w0", b"w1"])       # sib tail 12, cap 10
+    it = sib.scan(0, 12, batch=4)
+    assert [next(it) for _ in range(8)] == [b"p%d" % i for i in range(8)]
+    with pytest.raises(ForkBlocked):
+        next(it)                            # batch [8,12) crosses the cap
+
+
+def test_scan_of_squashed_lineage_raises_unknown_log_at_next_batch():
+    """Scanning a fork that a concurrent squash removes mid-iteration:
+    records already yielded stay valid; the next batch raises UnknownLog."""
+    system = BoltSystem(n_brokers=3)
+    root = system.create_log("root")
+    root.append_batch([b"p%d" % i for i in range(8)])
+    fork = root.cfork()
+    it = fork.scan(0, 8, batch=4)
+    assert [next(it) for _ in range(4)] == [b"p%d" % i for i in range(4)]
+    fork.squash()
+    with pytest.raises(UnknownLog):
+        next(it)
+
+
+def test_scan_of_holder_resumes_after_concurrent_squash():
+    """Scanning the HOLDER beyond its own fork point blocks while the hold
+    is active — but a squash of the promotable child mid-iteration releases
+    it, and the same iterator proceeds (scan re-resolves per batch)."""
+    system = BoltSystem(n_brokers=3)
+    root = system.create_log("root")
+    root.append_batch([b"p%d" % i for i in range(6)])
+    cand = root.cfork(promotable=True)      # fork point 6
+    root.append_batch([b"w0", b"w1"])       # withheld, tail 8
+    it = root.scan(0, 8, batch=4)           # explicit hi beyond the cap
+    assert [next(it) for _ in range(4)] == [b"p%d" % i for i in range(4)]
+    it2 = root.scan(0, 8, batch=4)
+    assert [next(it2) for _ in range(4)] == [b"p%d" % i for i in range(4)]
+    with pytest.raises(ForkBlocked):
+        next(it)                            # hold still active: batch blocks
+    cand.squash()                           # releases the hold mid-scan
+    assert list(it2) == [b"p4", b"p5", b"w0", b"w1"]

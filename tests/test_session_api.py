@@ -1,0 +1,436 @@
+"""Agent-session client API (DESIGN.md §12): unified append receipts,
+speculative fork transactions, and tailing subscriptions.
+
+The hypothesis suite at the bottom is the acceptance property set for
+``Speculation.commit()`` auto-rebase: the speculative suffix is replayed
+exactly once (zero-copy), parent records are never lost, and exhausting the
+bounded retry budget raises ``ConflictError`` carrying the metadata layer's
+fork-point diagnostics.
+"""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AppendReceipt, BoltSystem, ConflictError, ForkBlocked,
+                        GroupCommitConfig, InvalidOperation, Speculation,
+                        UnknownLog)
+from repro.core.sim import OpTally
+
+REC = lambda tag, i: f"{tag}{i}".encode()  # noqa: E731
+
+
+# ----------------------------------------------------------- unified receipts
+def test_per_call_receipt_is_resolved_immediately():
+    system = BoltSystem(n_brokers=2)
+    log = system.create_log("x")
+    r = log.append(b"a")
+    assert isinstance(r, AppendReceipt)
+    assert r.done and r.count == 1
+    assert r.position() == 0 and r.positions() == [0]
+    assert not r.withheld
+    rb = log.append_batch([b"b", b"c"])
+    assert rb.done and rb.count == 2 and rb.positions() == [1, 2]
+
+
+def test_group_commit_receipt_resolves_at_flush():
+    system = BoltSystem(group_commit=GroupCommitConfig(max_records=100))
+    log = system.create_log("x")
+    r = log.append(b"a")
+    assert isinstance(r, AppendReceipt) and not r.done
+    system.flush()
+    assert r.done and r.positions() == [0]
+    r2 = log.append(b"b")
+    assert r2.wait() is r2          # wait() forces the flush itself
+    assert r2.position() == 1
+
+
+def test_receipt_withheld_state_per_call_and_grouped():
+    for kwargs in ({}, {"group_commit": 4}):
+        system = BoltSystem(n_brokers=2, **kwargs)
+        root = system.create_log("root")
+        root.append(b"base").wait()
+        child = root.cfork(promotable=True)
+        r = root.append(b"hidden")
+        system.flush()
+        assert r.withheld and r.positions() is None and r.position() is None
+        child.promote()
+        assert root.read(0, 2) == [b"base", b"hidden"]
+
+
+def test_receipt_legacy_shim_warns_but_works():
+    system = BoltSystem(n_brokers=2)
+    log = system.create_log("x")
+    r = log.append_batch([b"a", b"b"])
+    with pytest.warns(DeprecationWarning):
+        assert r.result() == [0, 1]
+    with pytest.warns(DeprecationWarning):
+        assert r == [0, 1]
+    with pytest.warns(DeprecationWarning):
+        assert log.append(b"c") == 2
+    with pytest.warns(DeprecationWarning):
+        assert r[1] == 1
+    with pytest.warns(DeprecationWarning):
+        assert list(r) == [0, 1]
+    # receipt-to-receipt comparison is identity, NOT deprecated
+    assert r == r and not (r == log.append(b"d"))
+
+
+# -------------------------------------------- AgileLog.flush (satellite fix)
+def test_log_flush_is_scoped_to_this_logs_staged_records():
+    system = BoltSystem(group_commit=GroupCommitConfig(max_records=100))
+    a = system.create_log("a")
+    b = system.create_log("b")            # same broker 0 as `a`
+    ra = a.append(b"a0")
+    b.flush()                             # b has nothing staged: must NOT flush a
+    assert not ra.done
+    a.flush()                             # a's staged record commits now
+    assert ra.done and ra.positions() == [0]
+    rb = b.append(b"b0")
+    system.flush()                        # global flush still commits everything
+    assert rb.done and rb.positions() == [0]
+
+
+def test_dead_broker_set_initialized_in_constructor():
+    system = BoltSystem(n_brokers=3)
+    assert system._dead == set()          # no lazy getattr fallbacks (satellite)
+    system.fail_broker(1)
+    assert system._dead == {1}
+    assert system.live_broker(system.brokers[1]) is not system.brokers[1]
+
+
+# ----------------------------------------------------- tailing subscriptions
+def test_subscription_drains_in_batches_and_tracks_cursor():
+    system = BoltSystem(n_brokers=2)
+    log = system.create_log("x")
+    log.append_batch([REC("r", i) for i in range(10)])
+    sub = log.subscribe(from_pos=2, batch=3, follow=False)
+    batches = list(sub)
+    assert batches == [[REC("r", 2), REC("r", 3), REC("r", 4)],
+                       [REC("r", 5), REC("r", 6), REC("r", 7)],
+                       [REC("r", 8), REC("r", 9)]]
+    assert sub.position == 10 and sub.delivered == 8
+    assert sub.poll() == []               # caught up
+    log.append(b"late")
+    assert sub.poll() == [b"late"]        # cursor resumes exactly
+
+
+def test_subscription_follow_mode_backoff_and_max_idle():
+    system = BoltSystem(n_brokers=2)
+    log = system.create_log("x")
+    waits = []
+
+    def cooperative(idle):                # a producer racing the subscriber
+        waits.append(idle)
+        if len(waits) == 1:
+            log.append(b"pushed")
+
+    sub = log.subscribe(follow=True, max_idle=3, backoff=cooperative)
+    assert next(sub) == [b"pushed"]       # idle once, then delivery
+    with pytest.raises(StopIteration):    # nothing more: max_idle stops it
+        next(sub)
+    assert waits == [1, 1, 2]             # max_idle reached before 3rd backoff
+
+
+def test_subscription_resumed_round_gets_a_fresh_idle_budget():
+    """Regression: the idle counter must reset between iteration rounds —
+    a resumed follow-mode round (the cursor is a resume token) polls
+    max_idle times again instead of stopping instantly."""
+    system = BoltSystem(n_brokers=2)
+    log = system.create_log("x")
+    waits = []
+    sub = log.subscribe(follow=True, max_idle=2, backoff=waits.append)
+    assert list(sub) == [] and waits == [1]
+    log.append(b"r0")
+    assert list(sub) == [[b"r0"]] and waits == [1, 1]   # resumed, re-polled
+    assert next(iter(sub), None) is None and waits == [1, 1, 1]
+
+
+def test_subscription_respects_withheld_visibility():
+    system = BoltSystem(n_brokers=2)
+    root = system.create_log("root")
+    root.append_batch([b"a", b"b"])
+    sub = root.subscribe(batch=16)
+    assert sub.poll() == [b"a", b"b"]
+    child = root.cfork(promotable=True)
+    root.append(b"hidden")                # §4.1: beyond the fork point
+    assert sub.poll() == []               # not visible while the hold is active
+    child.promote()
+    assert sub.poll() == [b"hidden"]      # delivered after the hold resolves
+
+
+def test_subscription_validation_errors():
+    system = BoltSystem(n_brokers=2)
+    log = system.create_log("x")
+    with pytest.raises(InvalidOperation):
+        log.subscribe(batch=0)
+    with pytest.raises(InvalidOperation):
+        log.subscribe(from_pos=-1)
+
+
+def test_consumer_is_built_on_subscription():
+    from repro.streams import Consumer, Producer, Topic
+    system = BoltSystem(n_brokers=2)
+    topic = Topic.create(system, "t")
+    prod = Producer(topic, linger_records=8)
+    for i in range(20):
+        prod.produce({"i": i})
+    receipt = prod.flush()
+    assert receipt is None or receipt.done
+    cons = Consumer(topic)
+    got = [r["i"] for batch in cons.stream(follow=False) for r in batch]
+    assert got == list(range(20))
+    cons.commit()
+    assert Consumer.restore(topic).offset == 20
+
+
+# ------------------------------------------------------- speculation sessions
+def test_speculation_commit_without_conflict():
+    system = BoltSystem(n_brokers=3)
+    root = system.create_log("root")
+    root.append_batch([b"p0", b"p1"])
+    with root.speculate() as s:
+        s.append(b"s0")
+        s.append_batch([b"s1", b"s2"])
+        assert s.suffix_len == 3 and s.fork_point == 2
+        assert s.parent_advanced == 0
+        res = s.commit()
+    assert res.attempts == 1 and res.rebases == 0 and res.replayed == 0
+    assert list(res.positions) == [2, 3, 4] and res.log_id == root.log_id
+    assert root.read(0, 5) == [b"p0", b"p1", b"s0", b"s1", b"s2"]
+    assert system.metadata.state.live_log_ids() == [root.log_id]
+
+
+def test_speculation_auto_rebase_replays_suffix_zero_copy():
+    system = BoltSystem(n_brokers=3)
+    root = system.create_log("root")
+    root.append(b"p0")
+    deltas = []
+    with root.speculate(on_rebase=lambda s, lo, hi: deltas.append(s.read(lo, hi))
+                        or True) as s:
+        s.append_batch([b"s0", b"s1"])
+        root.append_batch([b"c0", b"c1"])     # producer races the commit
+        before = OpTally.capture(system)
+        res = s.commit()
+        tally = OpTally.capture(system).delta(before)
+    assert res.rebases == 1 and res.replayed == 2 and res.attempts == 2
+    # the rebase touched NO payload bytes: metadata-only re-appends, no PUTs
+    assert tally.puts == 0 and tally.replays == 1
+    assert tally.spec_rebases == 1 and tally.spec_replayed == 2
+    # the on_rebase hook saw exactly the parent's delta, already inherited
+    assert deltas == [[b"c0", b"c1"]]
+    # final linearization: suffix lands after every parent record, exactly once
+    assert root.read(0, 5) == [b"p0", b"c0", b"c1", b"s0", b"s1"]
+    assert system.metadata.check_convergence()
+
+
+def test_speculation_conflict_error_carries_diagnostics():
+    system = BoltSystem(n_brokers=3)
+    root = system.create_log("root")
+    root.append(b"p0")
+
+    def adversary(s, lo, hi):             # keeps the parent ahead forever
+        root.append(b"a")
+        return True
+
+    with pytest.raises(ConflictError) as ei:
+        with root.speculate(max_rebases=2, on_rebase=adversary) as s:
+            s.append(b"s0")
+            root.append(b"c0")
+            s.commit()
+    e = ei.value
+    assert e.attempts == 3                # 1 + max_rebases
+    assert e.log_id == root.log_id and e.advanced >= 1
+    assert e.parent_tail is not None and e.parent_tail > e.expected
+    assert e.fork_point is not None and e.holds_epoch is not None
+    # nothing lost, nothing leaked: parent kept every producer record, the
+    # speculative suffix is gone, and the fork was squashed
+    assert root.read(0, root.tail) == [b"p0", b"c0", b"a", b"a"]
+    assert system.metadata.state.live_log_ids() == [root.log_id]
+    assert system.metadata.check_convergence()
+
+
+def test_speculation_on_rebase_veto_aborts():
+    system = BoltSystem(n_brokers=3)
+    root = system.create_log("root")
+    root.append(b"p0")
+    with pytest.raises(ConflictError):
+        with root.speculate(on_rebase=lambda s, lo, hi: False) as s:
+            s.append(b"s0")
+            root.append(b"c0")
+            s.commit()
+    assert root.read(0, 2) == [b"p0", b"c0"]
+    assert system.metadata.state.live_log_ids() == [root.log_id]
+
+
+def test_speculation_losing_a_promote_race_rebases_onto_the_merge():
+    system = BoltSystem(n_brokers=3)
+    root = system.create_log("root")
+    root.append(b"p0")
+    a = root.speculate()
+    b = root.speculate()                  # same fork point: both allowed
+    a.append(b"A")
+    b.append(b"B")
+    assert a.commit().rebases == 0
+    res = b.commit()                      # fork squashed by a's win -> rebase
+    assert res.rebases == 1
+    assert root.read(0, 3) == [b"p0", b"A", b"B"]
+    assert system.spec_stats.commits == 2 and system.spec_stats.conflicts == 1
+
+
+def test_speculation_abort_paths():
+    system = BoltSystem(n_brokers=3)
+    root = system.create_log("root")
+    root.append(b"p0")
+    # explicit abort
+    with root.speculate() as s:
+        s.append(b"junk")
+        s.abort()
+    assert root.tail == 1
+    # implicit abort on exception
+    with pytest.raises(RuntimeError):
+        with root.speculate() as s:
+            s.append(b"junk")
+            raise RuntimeError("agent crashed")
+    assert root.tail == 1
+    # implicit abort on clean exit without commit (must release the hold)
+    with root.speculate() as s:
+        s.append(b"junk")
+    assert root.tail == 1
+    assert root.read(0, 1) == [b"p0"]     # no hold left: read succeeds
+    assert system.metadata.state.live_log_ids() == [root.log_id]
+    # a closed session rejects further use
+    with pytest.raises(InvalidOperation):
+        s.commit()
+    with pytest.raises(InvalidOperation):
+        s.append(b"late")
+    s.abort()                             # idempotent once closed
+
+
+def test_non_promotable_speculation_is_a_sandbox():
+    system = BoltSystem(n_brokers=3)
+    root = system.create_log("root")
+    root.append(b"p0")
+    with root.speculate(promotable=False) as s:
+        s.append(b"what-if")
+        root.append(b"p1")                # no hold: positions assigned
+        assert root.read(0, 2) == [b"p0", b"p1"]
+        assert s.read(0, 3) == [b"p0", b"what-if", b"p1"]
+        with pytest.raises(InvalidOperation):
+            s.commit()
+    assert system.metadata.state.live_log_ids() == [root.log_id]
+    with pytest.raises(InvalidOperation):
+        root.speculate(promotable=False, on_rebase=lambda s, lo, hi: True)
+
+
+def test_speculation_under_group_commit_flushes_suffix_at_commit():
+    system = BoltSystem(group_commit=GroupCommitConfig(max_records=1000))
+    root = system.create_log("root")
+    root.append(b"p0")
+    with root.speculate() as s:
+        r = s.append(b"s0")
+        assert not r.done                 # staged, not yet sequenced
+        root.append(b"c0")                # staged on the parent's broker
+        res = s.commit()                  # waits the suffix, then promotes
+    assert r.done
+    assert res.count == 1 and res.rebases == 0
+    # pinned semantics: a STAGED parent append is not sequenced until its
+    # broker flushes (DESIGN.md §9) — the commit linearizes before it, so it
+    # conflicts with nothing and lands after the promoted suffix at flush
+    assert root.read(0, root.tail) == [b"p0", b"s0", b"c0"]
+    assert system.metadata.check_convergence()
+
+
+def test_promote_if_outcomes_are_deterministic_and_replayable():
+    system = BoltSystem(n_brokers=2, n_meta_replicas=3, snapshot_every=4)
+    root = system.create_log("root")
+    root.append(b"p0")
+    # drive conflicts + rebases across snapshot boundaries, then crash/recover
+    for i in range(3):
+        with root.speculate() as s:
+            s.append(REC("s", i))
+            root.append(REC("c", i))
+            assert s.commit().rebases == 1
+    victim = next(r.rid for r in system.metadata.replicas
+                  if r.rid != system.metadata.leader_id)
+    system.metadata.fail_replica(victim)
+    with root.speculate() as s:
+        s.append(b"post-crash")
+        s.commit()
+    system.metadata.recover_replica(victim)
+    assert system.metadata.check_convergence()
+    want = root.read(0, root.tail)
+    system.metadata.fail_replica(system.metadata.leader_id)
+    assert root.read(0, root.tail) == want
+
+
+# ------------------------------------------------ acceptance property suite
+@given(prefill=st.integers(0, 3),
+       suffix_batches=st.lists(st.integers(1, 3), min_size=1, max_size=3),
+       pre_commit_appends=st.integers(0, 2),
+       adversary=st.lists(st.integers(0, 2), min_size=0, max_size=4),
+       max_rebases=st.integers(0, 3))
+@settings(max_examples=40, deadline=None)
+def test_speculation_commit_rebase_properties(prefill, suffix_batches,
+                                              pre_commit_appends, adversary,
+                                              max_rebases):
+    """Acceptance properties for auto-rebase (ISSUE 4):
+
+    * the speculative suffix appears in the committed parent EXACTLY once,
+      contiguously at the tail, in append order;
+    * parent records are never lost (every producer append survives, in
+      order, below the suffix), commit or abort alike;
+    * when the adversary outruns ``max_rebases``, commit raises
+      ``ConflictError`` with fork-point/tail diagnostics and the metadata
+      forest is left clean (fork squashed, replicas converged).
+    """
+    system = BoltSystem(n_brokers=3)
+    root = system.create_log("root")
+    produced = []
+
+    def produce(k):
+        for _ in range(k):
+            rec = REC("c", len(produced))
+            produced.append(rec)
+            root.append(rec)
+
+    produce(prefill)
+    schedule = list(adversary)
+
+    def on_rebase(s, lo, hi):
+        # the delta the rebase skipped over is exactly what the producer
+        # appended since the previous fork point
+        assert s.read(lo, hi) == produced[lo:hi]
+        if schedule:
+            produce(schedule.pop(0))
+        return True
+
+    suffix = []
+    spec = root.speculate(max_rebases=max_rebases, on_rebase=on_rebase)
+    for j, k in enumerate(suffix_batches):
+        batch = [REC(f"s{j}_", i) for i in range(k)]
+        suffix.extend(batch)
+        spec.append_batch(batch)
+    produce(pre_commit_appends)
+
+    try:
+        res = spec.commit()
+    except ConflictError as e:
+        assert e.attempts == max_rebases + 1
+        assert e.parent_tail is None or e.parent_tail >= e.expected
+        committed = False
+    else:
+        committed = True
+        assert res.count == len(suffix)
+        assert res.rebases <= max_rebases
+        assert res.replayed == res.rebases * len(suffix)
+
+    content = root.read(0, root.tail)
+    if committed:
+        # suffix exactly once, contiguous, at the tail; producers below it
+        assert content == produced + suffix
+        assert list(res.positions) == list(range(len(produced),
+                                                 len(produced) + len(suffix)))
+    else:
+        assert content == produced        # suffix fully squashed, nothing lost
+    assert system.metadata.state.live_log_ids() == [root.log_id]
+    assert system.metadata.check_convergence()
