@@ -1,0 +1,179 @@
+"""Segment-GC agent-churn benchmark (DESIGN.md §13).
+
+Agentic write patterns are speculative and high-churn: sessions fork, append
+a private suffix, and then either commit (one winner) or abort. Before §13
+every aborted suffix — and every conflict-rebased one — stranded its segment
+objects in shared storage forever. This scenario measures that directly:
+
+* **Churn storage amplification** — N speculation sessions race a hot
+  producer; a fixed fraction abort. ``amplification = store_bytes /
+  live_bytes`` (live = bytes reachable through the surviving root's view).
+  Acceptance: after churn quiesces and GC drains, amplification returns to
+  <= 1.2x (CI gates both the ceiling and its reciprocal ``efficiency``
+  floor via scripts/bench_compare.py).
+* **Group-commit variant** — multi-log segments (§9) mix records of many
+  sessions in one object, so a dead session leaves *partially* live
+  segments; amplification post-GC shows the cost of object-granular
+  reclamation under shared segments.
+* **Isolation** — deterministic DES (§8): the reaper books its deletes on
+  its own broker, so the latency-critical append path's p99 with background
+  GC stays at the no-GC baseline (ratio ~1.0); booking the same reap work
+  on the lc broker shows the contention the placement avoids.
+
+``BENCH_QUICK=1`` shrinks the run ~4x for CI smoke.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import List
+
+from repro.core import BoltSystem, ConflictError, GroupCommitConfig
+from repro.core.broker import Broker
+from repro.core.objectstore import MemoryObjectStore
+from repro.core.raft import MetadataService
+from repro.core.sim import (OpTally, Resource, ServiceTimes, Simulator,
+                            summarize)
+
+from .common import Row
+
+QUICK = os.environ.get("BENCH_QUICK", "") not in ("", "0")
+
+REC_BYTES = 512
+SUFFIX = 8                  # records per speculation session
+N_ROUNDS = 8 if QUICK else 32
+SESSIONS_PER_ROUND = 3      # concurrent same-fork-point speculations
+PRODUCE_EVERY = 2           # producer records per round (forces conflicts)
+
+
+def _live_bytes(system, log_id: int) -> int:
+    state = system.metadata.state
+    tail = state.tails.get(log_id)[0]
+    return sum(ln for _obj, _off, ln in
+               state.read_spans(log_id, 0, tail, _skip_checks=True))
+
+
+def _run_churn(group_commit: bool) -> dict:
+    """N rounds of concurrent speculation: each round opens three sessions at
+    one fork point (under group commit their staged suffixes share segment
+    objects — a dead session then leaves *partially* live segments), the
+    producer races them, two abort, one commits through a rebase."""
+    system = BoltSystem(
+        n_brokers=4,
+        group_commit=GroupCommitConfig(max_records=10_000) if group_commit
+        else None)
+    root = system.create_log("orders")
+    root.append_batch([b"p" * REC_BYTES] * 64).wait()
+    aborted = committed = conflicts = 0
+    for _ in range(N_ROUNDS):
+        sessions = [root.speculate(max_rebases=8)
+                    for _ in range(SESSIONS_PER_ROUND)]
+        for s in sessions:
+            s.append_batch([b"s" * REC_BYTES] * SUFFIX)
+        for _ in range(PRODUCE_EVERY):
+            root.append(b"p" * REC_BYTES)     # withheld: conflicts at commit
+        for s in sessions[:-1]:               # losers release their holds
+            s.abort()
+            aborted += 1
+        try:
+            res = sessions[-1].commit()       # rebases over the producer delta
+            committed += 1
+            conflicts += res.attempts - 1
+        except ConflictError:
+            aborted += 1
+    system.flush()
+    live = _live_bytes(system, root.log_id)
+    before = OpTally.capture(system)
+    pre = system.store.total_bytes / max(1, live)
+    system.gc()
+    tally = OpTally.capture(system).delta(before)
+    post = system.store.total_bytes / max(1, live)
+    return {"pre": pre, "post": post, "aborted": aborted,
+            "committed": committed, "conflicts": conflicts,
+            "reclaimed_objects": tally.deletes,
+            "reclaimed_bytes": tally.bytes_reclaimed,
+            "pending_after": system.metadata.state.gc_pending()}
+
+
+# -- DES isolation: does reaping perturb the lc path? -----------------------
+
+LC_RATE = 2000.0
+LC_OPS = 1000 if QUICK else 3000
+BACKLOG = 1000 if QUICK else 2000   # dead objects drained mid-run
+
+
+def _run_lc(reap_on: str) -> float:
+    """p99 lc append latency while a BACKLOG-object GC drain lands mid-run,
+    booked on the lc broker ('shared'), a separate broker ('isolated'), or
+    not at all ('none'). Every operation is REAL (store PUTs, metadata
+    proposals, a consensus-ordered gc command); only time is modeled (§8).
+    The drain is the worst case: one quantum reaping a whole churn backlog,
+    i.e. BACKLOG per-object DELETE calls issued from one broker's CPU."""
+    sim = Simulator()
+    service = ServiceTimes()
+    store = MemoryObjectStore()
+    store_res = Resource(servers=64)
+    metadata = MetadataService(n_replicas=3)
+    lc = Broker(0, store, metadata, sim=sim, service=service,
+                store_resource=store_res)
+    agent = Broker(1, store, metadata, sim=sim, service=service,
+                   store_resource=store_res)
+    root = metadata.propose(("create_root", "lc"))
+    rec = b"x" * 1024
+    if reap_on != "none":
+        # real churn backlog: a fork accumulates BACKLOG single-record
+        # objects, then dies. arrival=None: the churn happened BEFORE the
+        # measurement window, so its PUTs must not occupy the window's
+        # store pool — only the mid-run drain is under test
+        fork = metadata.propose(("cfork", root, False))
+        for _ in range(BACKLOG):
+            agent.append(fork, [rec], arrival=None)
+        metadata.propose(("squash", fork))
+    lat: List[float] = []
+    t_mid = LC_OPS / LC_RATE / 2
+    drained = False
+    for i in range(LC_OPS):
+        t = i / LC_RATE
+        if reap_on != "none" and not drained and t >= t_mid:
+            dead = metadata.propose(("gc", None, ()))
+            for obj in dead:
+                store.delete(obj)
+            reaper = lc if reap_on == "shared" else agent
+            reaper.book_reclaim(t, len(dead))
+            drained = True
+        _, done = lc.append(root, [rec], arrival=t)
+        lat.append(done - t)
+    return summarize(sorted(lat))[2]
+
+
+def bench_gc() -> List[Row]:
+    rows: List[Row] = []
+    churn = _run_churn(group_commit=False)
+    rows.append(("gc/churn/amplification_pre", churn["pre"],
+                 f"{churn['aborted']} aborted + {churn['committed']} committed "
+                 f"sessions ({churn['conflicts']} conflicts rebased): dead "
+                 "suffixes stranded before GC"))
+    rows.append(("gc/churn/amplification_post", churn["post"],
+                 f"after drain: {churn['reclaimed_objects']} objects / "
+                 f"{churn['reclaimed_bytes']} B reclaimed, "
+                 f"{churn['pending_after']} pending (acceptance <= 1.2x)"))
+    rows.append(("gc/churn/efficiency_post", 1.0 / churn["post"],
+                 "live_bytes/store_bytes reciprocal floor for the CI "
+                 "--key-min gate (>= 0.833 == amplification <= 1.2x)"))
+    gcc = _run_churn(group_commit=True)
+    rows.append(("gc/groupcommit/amplification_pre", gcc["pre"],
+                 "multi-log segments (§9): sessions share objects"))
+    rows.append(("gc/groupcommit/amplification_post", gcc["post"],
+                 f"{gcc['reclaimed_objects']} objects reclaimed; partially-"
+                 "live shared segments keep this above the per-call ratio"))
+    p99_none = _run_lc("none")
+    p99_iso = _run_lc("isolated")
+    p99_shared = _run_lc("shared")
+    rows.append(("gc/isolation/lc_p99_ratio", p99_iso / p99_none,
+                 f"lc append p99 {p99_iso * 1e6:.0f}us with a {BACKLOG}-object "
+                 f"drain on the reaper's own broker vs {p99_none * 1e6:.0f}us "
+                 "without GC (~1.0 = GC does not perturb the lc path)"))
+    rows.append(("gc/isolation/lc_p99_shared_ratio", p99_shared / p99_none,
+                 f"{p99_shared * 1e6:.0f}us when the same drain books on the "
+                 "lc broker — the CPU burst §5.7-style placement avoids"))
+    return rows

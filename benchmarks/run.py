@@ -21,6 +21,7 @@ from .bench_cforks import bench_cfork_ablation, bench_many_cforks
 from .bench_forks import (bench_fork_impact, bench_fork_latency,
                           bench_lookup_depth, bench_metadata_memory,
                           bench_promote)
+from .bench_gc import bench_gc
 from .bench_isolation import bench_isolation
 from .bench_meta import bench_meta
 from .bench_pipeline import bench_pipeline
@@ -41,6 +42,7 @@ ALL = [
     ("read_path", bench_read),
     ("meta_path", bench_meta),
     ("agent_sessions", bench_agent),
+    ("segment_gc", bench_gc),
     ("data_pipeline", bench_pipeline),
     ("roofline", bench_roofline),
 ]

@@ -73,3 +73,15 @@ for batch in follower.stream(follow=False):
         kinds[rec["kind"]] = kinds.get(rec["kind"], 0) + 1
 follower.commit()
 print("[subscribe] drained", follower.offset, "records by kind:", kinds)
+
+# --------------------------------------------- segment GC (DESIGN.md §13)
+# the agents above churned forks constantly (sFork scans, what-if cForks,
+# speculation aborts); without reclamation every dead fork's segments
+# would sit in shared storage forever. One drain returns storage to the
+# live working set — and the safety harness guarantees it never touches a
+# byte any surviving log can still read.
+before = system.store.total_bytes
+stats = system.gc()
+print(f"[gc] reclaimed {stats.objects_reclaimed} dead segment objects "
+      f"({stats.bytes_reclaimed} B): store {before} -> "
+      f"{system.store.total_bytes} B, {stats.tracked} live objects tracked")

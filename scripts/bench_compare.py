@@ -6,6 +6,7 @@ Usage:
         --key meta/lookup_hold/penalty/holds=4 \
         --key-up meta/proposals/speedup \
         --key-min agent/commit_tput/speedup=2.0 \
+        --key-max gc/churn/amplification_post=1.2 \
         [--max-regress 0.25]
 
 ``--key``     names a lower-is-better value (latencies, penalty ratios):
@@ -17,6 +18,8 @@ Usage:
               new < value. This is how a paper-style acceptance criterion
               ("session commit throughput >= 2x hand-rolled", ISSUE 4) stays
               enforced even if the committed baseline itself drifts.
+``--key-max`` the ceiling counterpart: fails when new > value (e.g.
+              "post-churn storage amplification <= 1.2x", ISSUE 5).
 
 Keys may be given multiple times. A key missing from NEW fails (a renamed or
 dropped benchmark must update the CI wiring deliberately); a key missing from
@@ -47,21 +50,31 @@ def main() -> int:
                     metavar="KEY=VALUE",
                     help="absolute acceptance floor for a key in NEW "
                          "(repeatable); fails when new < value")
+    ap.add_argument("--key-max", action="append", default=[],
+                    metavar="KEY=VALUE",
+                    help="absolute acceptance ceiling for a key in NEW "
+                         "(repeatable); fails when new > value")
     ap.add_argument("--max-regress", type=float, default=0.25,
                     help="allowed fractional regression (default 0.25)")
     args = ap.parse_args()
-    if not args.key and not args.key_up and not args.key_min:
+    if not (args.key or args.key_up or args.key_min or args.key_max):
         print("bench_compare: no keys named, nothing to check")
         return 0
-    floors = []
-    for spec in args.key_min:
-        key, sep, value = spec.rpartition("=")
-        try:
-            floors.append((key, float(value)))
-        except ValueError:
-            sep = ""
-        if not sep or not key:
-            ap.error(f"--key-min expects KEY=VALUE, got {spec!r}")
+
+    def parse_bounds(specs, flag):
+        out = []
+        for spec in specs:
+            key, sep, value = spec.rpartition("=")
+            try:
+                out.append((key, float(value)))
+            except ValueError:
+                sep = ""
+            if not sep or not key:
+                ap.error(f"{flag} expects KEY=VALUE, got {spec!r}")
+        return out
+
+    floors = parse_bounds(args.key_min, "--key-min")
+    ceilings = parse_bounds(args.key_max, "--key-max")
 
     with open(args.base) as f:
         base = json.load(f)
@@ -95,26 +108,28 @@ def main() -> int:
         if bad:
             failed.append(key)
 
-    for key, floor in floors:
-        checked += 1
-        if key not in new:
-            print(f"FAIL  {key}: missing from {args.new}")
-            failed.append(key)
-            continue
-        n = float(new[key])
-        bad = n < floor
-        print(f"{'FAIL' if bad else 'ok  '}  {key}: new={n:.3f} "
-              f"(acceptance floor {floor:.3f})")
-        if bad:
-            failed.append(key)
+    for bounds, word, worse in ((floors, "floor", lambda n, b: n < b),
+                                (ceilings, "ceiling", lambda n, b: n > b)):
+        for key, bound in bounds:
+            checked += 1
+            if key not in new:
+                print(f"FAIL  {key}: missing from {args.new}")
+                failed.append(key)
+                continue
+            n = float(new[key])
+            bad = worse(n, bound)
+            print(f"{'FAIL' if bad else 'ok  '}  {key}: new={n:.3f} "
+                  f"(acceptance {word} {bound:.3f})")
+            if bad:
+                failed.append(key)
 
     if failed:
         print(f"bench_compare: {len(failed)} of {checked} checked keys "
-              f"regressed >{args.max_regress * 100:.0f}% or undershot an "
-              "acceptance floor: " + ", ".join(failed))
+              f"regressed >{args.max_regress * 100:.0f}% or missed an "
+              "acceptance floor/ceiling: " + ", ".join(failed))
         return 1
     print(f"bench_compare: {checked} keys within {args.max_regress * 100:.0f}% "
-          "and above all floors")
+          "and inside all acceptance bounds")
     return 0
 
 

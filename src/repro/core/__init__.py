@@ -7,6 +7,8 @@ Layers (bottom-up):
   metadata    — the SMR state machine: forks, promote, squash, reads
   raft        — replicated metadata service (majority commit, failover)
   broker      — stateless brokers (append batching, object cache, DES hooks)
+  gc          — lineage-aware segment garbage collection: consensus-ordered
+                manifests + broker-side reaper (DESIGN.md §13)
   api         — the agent-session client API (receipts, speculation sessions,
                 tailing subscriptions — DESIGN.md §12) + BoltSystem wiring
   sim         — deterministic DES used by isolation benchmarks
@@ -17,9 +19,11 @@ from .api import (AgileLog, AppendReceipt, BoltSystem, CommitResult,
 from .broker import GroupCommitConfig
 from .errors import (AgileLogError, ConflictError, ForkBlocked,
                      InvalidOperation, UnknownLog)
+from .gc import GarbageCollector, GCConfig, GCStats
 
 __all__ = [
     "AgileLog", "AppendReceipt", "BoltSystem", "CommitResult", "Speculation",
-    "Subscription", "GroupCommitConfig", "AgileLogError", "ConflictError",
-    "ForkBlocked", "InvalidOperation", "UnknownLog",
+    "Subscription", "GroupCommitConfig", "GarbageCollector", "GCConfig",
+    "GCStats", "AgileLogError", "ConflictError", "ForkBlocked",
+    "InvalidOperation", "UnknownLog",
 ]

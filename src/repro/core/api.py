@@ -50,6 +50,7 @@ from typing import (Callable, Dict, Iterator, List, Optional, Sequence, Set,
 
 from .broker import Broker, GroupCommitConfig, PendingAppend
 from .errors import AgileLogError, ConflictError, InvalidOperation, UnknownLog
+from .gc import GarbageCollector, GCConfig, GCStats
 from .objectstore import MemoryObjectStore, ObjectStore
 from .raft import MetadataService
 from .sim import SpecStats
@@ -378,6 +379,7 @@ class Speculation:
                 base, count = outcome[1]
                 self._state = "committed"
                 self._stats.commits += 1
+                system._gc_nudge()   # promote may have squashed rivals (§13)
                 return CommitResult(log_id=self.parent.log_id, base=base,
                                     count=count, attempts=attempts,
                                     rebases=self.rebases,
@@ -422,20 +424,32 @@ class Speculation:
         no payload bytes moved (DESIGN.md §12)."""
         segments = [r._pending.segment for r in self._suffix
                     if r._pending.segment is not None and r.count > 0]
+        # pin the suffix segments for the squash -> replay window (§13): the
+        # squash drops their manifest refcounts — possibly to zero when this
+        # fork was their only lineage — and a GC quantum sequenced between
+        # the squash and the replay would otherwise reclaim bytes the replay
+        # is about to re-index. Pins ride into the `gc` command, so the skip
+        # is consensus-ordered too.
+        collector = self.parent.system.collector
+        pin_ids = {object_id for object_id, _offs, _lens in segments}
+        collector.pin(pin_ids)
         try:
-            self.log.squash()
-        except AgileLogError:
-            pass                      # already squashed by the winning sibling
-        self.log = self.parent.cfork(promotable=self.promotable,
-                                     dedicated=self._dedicated)
-        self._base = self._info().fork_point
-        replayed: List[AppendReceipt] = []
-        n = 0
-        for object_id, offsets, lengths in segments:
-            pending = self.log._b().replay(self.log.log_id, object_id,
-                                           offsets, lengths)
-            replayed.append(AppendReceipt(pending))
-            n += len(offsets)
+            try:
+                self.log.squash()
+            except AgileLogError:
+                pass                  # already squashed by the winning sibling
+            self.log = self.parent.cfork(promotable=self.promotable,
+                                         dedicated=self._dedicated)
+            self._base = self._info().fork_point
+            replayed: List[AppendReceipt] = []
+            n = 0
+            for object_id, offsets, lengths in segments:
+                pending = self.log._b().replay(self.log.log_id, object_id,
+                                               offsets, lengths)
+                replayed.append(AppendReceipt(pending))
+                n += len(offsets)
+        finally:
+            collector.unpin(pin_ids)
         self._suffix = replayed
         self.rebases += 1
         self.replayed += n
@@ -455,6 +469,9 @@ class Speculation:
                 self.log.squash()
             except AgileLogError:
                 pass                  # fork already gone (lost promote race)
+        # eager hand-off (§13): the squash just released this session's
+        # private suffix segments — don't leave them for a later sweep
+        self.parent.system._gc_nudge()
 
     # -- context manager -----------------------------------------------------
     def __enter__(self) -> "Speculation":
@@ -482,7 +499,8 @@ class BoltSystem:
                  cache_page_bytes: int = 64 << 10,
                  readahead_bytes: int = 256 << 10,
                  view_cache: bool = True,
-                 pipeline_apply: bool = True) -> None:
+                 pipeline_apply: bool = True,
+                 gc: Union[None, bool, int, GCConfig] = None) -> None:
         if group_commit is True:
             group_commit = GroupCommitConfig()
         elif group_commit is False or group_commit == 0:
@@ -511,12 +529,56 @@ class BoltSystem:
         self._next_broker = 1
         self._dead: Set[int] = set()             # failed broker ids
         self.spec_stats = SpecStats()            # session counters (§12)
+        # -- segment GC (DESIGN.md §13). Manifest accounting in the metadata
+        # layer is always on; `gc` only shapes the reaper: None -> manual
+        # (explicit system.gc()/gc_quantum()), True -> background quanta on
+        # churn hand-off points (abort/close/squash/promote), int -> auto
+        # with that per-quantum batch, or a full GCConfig.
+        if gc is True:
+            gc = GCConfig(auto=True)
+        elif gc is False or gc is None:
+            gc = GCConfig()
+        elif isinstance(gc, int):
+            if gc <= 0:
+                raise ValueError(f"gc batch size must be positive, got {gc}")
+            gc = GCConfig(batch=gc, auto=True)
+        elif not isinstance(gc, GCConfig):
+            raise TypeError(f"gc must be None, bool, int, or GCConfig, "
+                            f"got {type(gc).__name__}")
+        self.collector = GarbageCollector(self, gc)
 
     # -- group commit (DESIGN.md §9) ------------------------------------------------
     def flush(self) -> None:
         """Commit every broker's staging buffer (no-op when group commit is off)."""
         for b in self.brokers:
             b.flush()
+
+    # -- segment GC (DESIGN.md §13) -------------------------------------------------
+    def gc(self, arrival: Optional[float] = None) -> GCStats:
+        """Drain reclamation: one unbounded consensus-ordered ``gc`` command
+        reclaims every currently-dead segment object, the reaper deletes them
+        from shared storage and invalidates broker cache pages. Returns
+        :class:`GCStats` (``pending`` > 0 afterwards only for pinned ids)."""
+        return self.collector.collect(arrival=arrival)
+
+    def gc_quantum(self, limit: Optional[int] = None,
+                   arrival: Optional[float] = None) -> List[str]:
+        """One incremental background GC step (up to the configured batch);
+        returns the object ids reclaimed this quantum."""
+        return self.collector.quantum(limit=limit, arrival=arrival)
+
+    @property
+    def gc_stats(self) -> GCStats:
+        return self.collector.stats()
+
+    def _gc_nudge(self) -> None:
+        """Churn hand-off point (abort/close/squash/promote): in auto mode,
+        run a quantum so dead suffixes are reclaimed as they die rather than
+        at the next explicit drain. The pending check keeps no-op nudges from
+        spending a consensus round."""
+        if (self.collector.config.auto
+                and self.metadata.state.gc_pending() > 0):
+            self.collector.quantum()
 
     def __enter__(self) -> "BoltSystem":
         return self
@@ -716,11 +778,31 @@ class AgileLog:
 
     def promote(self, mode: Optional[str] = None) -> bool:
         self._sync()
-        return self.system.metadata.propose(("promote", self.log_id, mode))
+        result = self.system.metadata.propose(("promote", self.log_id, mode))
+        self.system._gc_nudge()   # restructure may have freed segments (§13)
+        return result
 
     def squash(self) -> None:
         self._sync()
         self.system.metadata.propose(("squash", self.log_id))
+        self.system._gc_nudge()   # dead-lineage hand-off (§13)
+
+    def close(self) -> None:
+        """Release this handle's log (DESIGN.md §13): flush any staged
+        records, and — for a FORK — squash it, eagerly handing its private
+        suffix segments to GC (the next quantum reclaims whatever no other
+        lineage references). A root log only flushes: closing a handle must
+        not destroy the shared stream. Idempotent: closing a handle whose
+        fork is already gone (squashed, or promoted away) is a no-op."""
+        b = self._b()
+        b._flush_if_staged(self.log_id)
+        meta = self.system.metadata.state.logs.get(self.log_id)
+        if meta is not None and meta.alive and meta.kind != "root":
+            try:
+                self.system.metadata.propose(("squash", self.log_id))
+            except AgileLogError:
+                pass              # blocked/raced away: nothing to hand over
+        self.system._gc_nudge()
 
     def __repr__(self) -> str:
         return f"AgileLog(id={self.log_id}, broker={self.broker.broker_id})"

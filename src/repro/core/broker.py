@@ -345,6 +345,22 @@ class Broker:
         t += (s.metadata_op_cached if meta_cached else s.metadata_op) + s.net_rtt
         return t
 
+    def book_reclaim(self, arrival: Optional[float], n_deletes: int) -> float:
+        """Book one GC reap quantum on THIS broker (DESIGN.md §13): the `gc`
+        sequencing round, per-DELETE request handling on this broker's CPU
+        (each object is its own store call), and the DELETEs on the store
+        pool. The reaper runs on its own broker precisely so a backlog drain
+        is a CPU burst the latency-critical workload never queues behind —
+        the isolation benchmark places it both ways to show the difference."""
+        if self.sim is None or arrival is None:
+            return 0.0
+        s = self.service
+        t = self.cpu.submit(arrival, s.broker_cpu_per_req * max(1, n_deletes))
+        if self.store_resource is not None and n_deletes:
+            t = self.store_resource.submit(t, n_deletes * s.store_delete_base)
+        t += s.metadata_op + s.net_rtt
+        return t
+
 
 class KafkaLikeBroker(Broker):
     """Stateful shared-broker baseline (§6.2): all workloads hit the same broker

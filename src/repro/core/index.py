@@ -165,6 +165,16 @@ class RunIndex:
         return tuple((r.start, r.object_id, r.offsets.tobytes(), r.lengths.tobytes())
                      for r in self._runs)
 
+    def object_refcounts(self) -> dict:
+        """Per-object reference multiset of this index: object id -> number of
+        runs referencing it. This is the unit the segment-GC manifests count
+        (DESIGN.md §13): an object is reclaimable only when the sum of these
+        over every log (live or frozen) reaches zero."""
+        out: dict = {}
+        for r in self._runs:
+            out[r.object_id] = out.get(r.object_id, 0) + 1
+        return out
+
     def snapshot(self) -> "RunIndex":
         """O(runs) snapshot sharing the (immutable) Run objects — used when a
         promote must preserve the old index for severed/frozen dependents."""
@@ -204,6 +214,15 @@ class NaiveIndex:
     def content_digest(self) -> Tuple:
         return (tuple(sorted(self.entries.items())),
                 tuple(sorted(self._local_positions)))
+
+    def object_refcounts(self) -> dict:
+        """Per-object reference multiset (DESIGN.md §13): one reference per
+        entry, copies included — a BoltNaiveCF descendant's copied entries
+        keep their object alive exactly as long as the descendant exists."""
+        out: dict = {}
+        for obj, _off, _ln in self.entries.values():
+            out[obj] = out.get(obj, 0) + 1
+        return out
 
     def nbytes(self) -> int:
         n = sys.getsizeof(self.entries) + sys.getsizeof(self._local_positions)

@@ -32,8 +32,9 @@ validate), and every other descendant's appends/deep reads are blocked.
 from __future__ import annotations
 
 import bisect
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional, Set, Tuple
+from typing import Deque, Dict, Iterable, List, Optional, Set, Tuple
 
 import numpy as np
 
@@ -170,6 +171,24 @@ class MetadataState:
         self._view_deps: Dict[int, Set[int]] = {}  # log id -> view owners through it
         self._holders: Set[int] = set()   # log ids with >=1 promotable fork
         self.stats = ViewStats()
+        # -- segment GC manifests (DESIGN.md §13) --------------------------
+        # `object_refs[obj]` counts index entries (RunIndex runs / NaiveIndex
+        # entries) referencing `obj` across EVERY log in `self.logs`, frozen
+        # stand-ins included — a refcount over lineages, not ownership: group
+        # commit makes one object multi-log, `Broker.replay` makes it
+        # multi-lineage, and a frozen pre-promote chain keeps it pinned for
+        # severed dependents. Objects whose count hits zero join
+        # `_reclaimable` (in consensus death order); the `gc` SMR command
+        # pops candidates, re-checks them (a replay may have re-attached
+        # references), and moves the survivors to `reclaimed` — so every
+        # replica, including snapshot-restored followers, converges on the
+        # identical reclaimed set. All three structures are part of the
+        # pickled snapshot state (NOT dropped in __getstate__).
+        self.object_refs: Dict[str, int] = {}
+        self._reclaimable: Deque[str] = deque()
+        self.reclaimed: Set[str] = set()
+        self.gc_epoch = 0            # gc commands applied
+        self.reclaimed_total = 0     # objects ever reclaimed
 
     def __getstate__(self) -> dict:
         # Raft snapshots pickle the whole state machine; the view cache and
@@ -211,6 +230,87 @@ class MetadataState:
         else:
             self._holders.discard(meta.log_id)
         self.holds_version += 1
+
+    # -- segment-GC manifests (DESIGN.md §13) -------------------------------
+    def _register_object(self, object_id: str) -> None:
+        """First sight of a PUT object: enters the manifests at zero
+        references. NOT enqueued as a candidate here — a successful append
+        bumps the count immediately, and enqueueing every object would grow
+        the candidate queue with one stale entry per append; only the
+        deterministic-failure path in `_apply_append` (an orphaned PUT)
+        enqueues, keeping the queue proportional to *dead* objects."""
+        if object_id not in self.object_refs and object_id not in self.reclaimed:
+            self.object_refs[object_id] = 0
+
+    def _ref_add(self, object_id: str, n: int = 1) -> None:
+        self.object_refs[object_id] = self.object_refs.get(object_id, 0) + n
+
+    def _ref_drop(self, object_id: str, n: int = 1) -> None:
+        left = self.object_refs.get(object_id, 0) - n
+        assert left >= 0, f"negative refcount for {object_id}"
+        self.object_refs[object_id] = left
+        if left == 0:
+            self._reclaimable.append(object_id)
+
+    def _attach_index(self, index) -> None:
+        """A whole index became (another) live reference holder — a frozen
+        pre-promote snapshot, or a parent adopting the child's index."""
+        for obj, n in index.object_refcounts().items():
+            self._ref_add(obj, n)
+
+    def _detach_index(self, index) -> None:
+        """A log left `self.logs` (or had its index replaced): every entry of
+        its index releases one reference. Runs may still be *shared* with a
+        surviving index object — counting is per attached index, so the
+        survivor's contribution keeps the objects alive."""
+        for obj, n in index.object_refcounts().items():
+            self._ref_drop(obj, n)
+
+    def _apply_gc(self, limit: Optional[int] = None,
+                  pinned: Tuple[str, ...] = ()) -> List[str]:
+        """The reclamation linearization point (DESIGN.md §13): pop up to
+        ``limit`` zero-reference candidates (in death order) and move them to
+        the reclaimed set, returning their object ids for the broker-side
+        reaper. Stale candidates — objects a replay or
+        promote re-attached since they hit zero, or duplicates of an already
+        reclaimed id — are discarded; ``pinned`` ids (in-flight session
+        rebases holding durable segment refs outside any index) are requeued
+        untouched. Runs as ONE SMR command, so the reclaimed set is identical
+        on every replica and on any snapshot-restored follower."""
+        pinned_set = set(pinned)
+        out: List[str] = []
+        requeue: List[str] = []
+        scanned = 0
+        budget = len(self._reclaimable)
+        while self._reclaimable and scanned < budget \
+                and (limit is None or len(out) < limit):
+            scanned += 1
+            obj = self._reclaimable.popleft()
+            if obj in self.reclaimed or self.object_refs.get(obj, 0) > 0:
+                continue   # stale candidate: duplicate, or live again
+            if obj in pinned_set:
+                requeue.append(obj)
+                continue
+            del self.object_refs[obj]
+            self.reclaimed.add(obj)
+            out.append(obj)
+        self._reclaimable.extend(requeue)
+        self.gc_epoch += 1
+        self.reclaimed_total += len(out)
+        return out
+
+    def gc_pending(self) -> int:
+        """Distinct zero-reference objects awaiting a `gc` quantum."""
+        seen: Set[str] = set()
+        for obj in self._reclaimable:
+            if (obj not in seen and obj not in self.reclaimed
+                    and self.object_refs.get(obj, 0) == 0):
+                seen.add(obj)
+        return len(seen)
+
+    def gc_tracked(self) -> int:
+        """Objects with at least one live index reference."""
+        return sum(1 for v in self.object_refs.values() if v > 0)
 
     # -- invalidation (DESIGN.md §11) ---------------------------------------
     def _drop_view(self, owner: int) -> None:
@@ -266,19 +366,37 @@ class MetadataState:
 
     def _apply_append(self, log_id: int, object_id: str,
                       offsets: Tuple[int, ...], lengths: Tuple[int, ...]) -> Optional[List[int]]:
-        meta = self._get(log_id)
-        if self._blocked_for_ops(meta):
-            raise ForkBlocked(
-                f"appends to log {log_id} are blocked by an ancestor's promotable cFork")
+        # register BEFORE any deterministic failure: the broker already PUT
+        # the object, so a blocked/unknown-log append leaves an orphan in
+        # shared storage that only the zero-ref candidate path can reclaim
+        self._register_object(object_id)
+        try:
+            if object_id in self.reclaimed:
+                raise InvalidOperation(
+                    f"object {object_id} was already reclaimed by GC; "
+                    "sequencing it would index deleted storage")
+            meta = self._get(log_id)
+            if self._blocked_for_ops(meta):
+                raise ForkBlocked(
+                    f"appends to log {log_id} are blocked by an ancestor's promotable cFork")
+        except Exception:
+            # deterministic failure with the PUT already durable: an orphan —
+            # enqueue it (still zero-ref unless a batch-mate entry succeeded)
+            if (self.object_refs.get(object_id, 0) == 0
+                    and object_id not in self.reclaimed):
+                self._reclaimable.append(object_id)
+            raise
         tail, _blk = self.tails.get(log_id)
         k = len(offsets)
         if self._use_naive_index:
             for i in range(k):
                 meta.index.add_local(tail + i, (object_id, offsets[i], lengths[i]))
+            self._ref_add(object_id, k)
         else:
             meta.index.append_run(tail, object_id,
                                   np.asarray(offsets, dtype=np.int64),
                                   np.asarray(lengths, dtype=np.int64))
+            self._ref_add(object_id)
         if self.cf_mode == "naive":
             # BoltNaiveCF: duplicate the new entries into EVERY descendant's
             # index at that descendant's own tail (Fig. 4a), eagerly.
@@ -289,6 +407,7 @@ class MetadataState:
                 d_index = self.logs[d].index
                 for i in range(k):
                     d_index.add_copy(d_tail + i, (object_id, offsets[i], lengths[i]))
+                self._ref_add(object_id, k)
         self.tails.range_add(log_id, d_tail=k)
         if self._holds(meta):
             return None  # §4.1: positions beyond a promotable fork point are withheld
@@ -332,7 +451,9 @@ class MetadataState:
         """BoltMetaCpy: copy the parent's fully-resolved view [0, upto) into the
         child's index (this is the expensive O(n) path the paper measures)."""
         for pos in range(upto):
-            child_index.add_copy(pos, self._lookup_one(log_id, pos))
+            span = self._lookup_one(log_id, pos)
+            child_index.add_copy(pos, span)
+            self._ref_add(span[0])   # the copy is a live reference (§13)
 
     def _apply_cfork(self, parent_id: int, promotable: bool) -> int:
         parent = self._get(parent_id)
@@ -406,6 +527,9 @@ class MetadataState:
                 meta.hli_children = (meta.hli_children - removed_set) | (meta.hli_children & keep)
             else:
                 del self.logs[d]
+                # dead-lineage event (§13): the log's index entries release
+                # their segment references; zero-ref objects queue for gc
+                self._detach_index(meta.index)
                 if meta.parent is not None and meta.parent in self.logs:
                     self.logs[meta.parent].hli_children.discard(d)
         self._gc_frozen()
@@ -420,6 +544,7 @@ class MetadataState:
                 meta = self.logs.pop(lid)
                 self._holders.discard(lid)
                 self._invalidate_through((lid,))
+                self._detach_index(meta.index)   # chain-GC dead-lineage event (§13)
                 if meta.parent is not None and meta.parent in self.logs:
                     self.logs[meta.parent].hli_children.discard(lid)
                 progressed = True
@@ -510,6 +635,11 @@ class MetadataState:
             self.logs[child.parent].hli_children.discard(child_id)
         parent.hli_children.discard(child_id)
         del self.logs[child_id]
+        # release the child's manifest contribution (§13). Splice mode
+        # attached one extra reference when the parent adopted the child's
+        # index object, so its entries stay counted exactly once; copy mode
+        # re-referenced the child-lineage runs inside the parent's new index.
+        self._detach_index(child.index)
         self._holders.discard(child_id)
         self._gc_frozen()
         return True
@@ -574,7 +704,12 @@ class MetadataState:
             gp.hli_children.discard(parent.log_id)
             gp.hli_children.add(frozen_id)
         self._rebind_snapshot_deps(parent, frozen, child)
-        # splice: parent continues the child's lineage
+        # splice: parent continues the child's lineage. Manifests (§13): the
+        # old parent index merely moves (parent -> frozen stand-in), but the
+        # child's index is now held TWICE (child until its deletion below,
+        # plus the parent) — attach the parent's adoption; _apply_promote
+        # releases the child's own contribution when it deletes the log.
+        self._attach_index(child.index)
         parent.index = child.index
         if child.parent == parent.log_id:
             parent.parent = frozen_id
@@ -668,6 +803,9 @@ class MetadataState:
                              parent=parent.parent, index=parent.index.snapshot(),
                              stands_for=parent.log_id)
             self.logs[frozen_id] = frozen
+            # the snapshot shares Run objects but is a second attached index:
+            # its entries hold their segments for the severed dependents (§13)
+            self._attach_index(frozen.index)
             if parent.parent is not None:
                 self.logs[parent.parent].hli_children.add(frozen_id)
             self._rebind_snapshot_deps(parent, frozen, child)
@@ -692,6 +830,11 @@ class MetadataState:
                 r = p_runs[pi]
                 new_index.append_run(p_start, r.object_id, r.offsets, r.lengths)
                 pi += 1
+        # manifest swap (§13): the rebuilt index re-references the surviving
+        # segments (child-lineage runs included), the replaced one releases —
+        # only segments that appear in NEITHER can drop toward zero here
+        self._attach_index(new_index)
+        self._detach_index(parent.index)
         parent.index = new_index
 
     # ---------------------------------------------------------------- queries

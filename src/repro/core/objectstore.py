@@ -33,6 +33,11 @@ class ObjectStore:
     def exists(self, key: str) -> bool:
         raise NotImplementedError
 
+    def size(self, key: str) -> Optional[int]:
+        """Object size in bytes, or None if absent (used by the GC reaper to
+        book bytes_reclaimed without a GET)."""
+        raise NotImplementedError
+
     def list(self, prefix: str = "") -> List[str]:
         raise NotImplementedError
 
@@ -43,8 +48,10 @@ class MemoryObjectStore(ObjectStore):
         self._lock = threading.Lock()
         self.put_count = 0
         self.get_count = 0
+        self.delete_count = 0
         self.bytes_written = 0
         self.bytes_read = 0
+        self.bytes_deleted = 0
 
     def put(self, key: str, data: bytes) -> None:
         with self._lock:
@@ -63,11 +70,19 @@ class MemoryObjectStore(ObjectStore):
 
     def delete(self, key: str) -> None:
         with self._lock:
-            self._objects.pop(key, None)
+            obj = self._objects.pop(key, None)
+            if obj is not None:
+                self.delete_count += 1
+                self.bytes_deleted += len(obj)
 
     def exists(self, key: str) -> bool:
         with self._lock:
             return key in self._objects
+
+    def size(self, key: str) -> Optional[int]:
+        with self._lock:
+            obj = self._objects.get(key)
+            return None if obj is None else len(obj)
 
     def list(self, prefix: str = "") -> List[str]:
         with self._lock:
@@ -119,6 +134,12 @@ class FileObjectStore(ObjectStore):
 
     def exists(self, key: str) -> bool:
         return os.path.exists(self._path(key))
+
+    def size(self, key: str) -> Optional[int]:
+        try:
+            return os.path.getsize(self._path(key))
+        except OSError:
+            return None
 
     def list(self, prefix: str = "") -> List[str]:
         out = []
@@ -217,6 +238,7 @@ class LRUObjectCache:
         self.readahead = readahead_bytes
         self._pages: "OrderedDict[Tuple[str, int], bytes]" = OrderedDict()
         self._size = 0
+        self._obj_pages: Dict[str, set] = {}  # key -> resident page numbers
         self._obj_size: Dict[str, int] = {}   # sizes learned from short reads
         self._last_end: Dict[str, int] = {}   # per-object last request end
         # the two hint dicts above must stay bounded too (brokers never reuse
@@ -227,6 +249,7 @@ class LRUObjectCache:
         self.misses = 0
         self.ranged_gets = 0
         self.bytes_fetched = 0
+        self.invalidations = 0                # invalidate_object calls
 
     # -- store traffic ------------------------------------------------------
     def _bypass(self, key: str, offset: int, length: Optional[int]) -> bytes:
@@ -244,9 +267,37 @@ class LRUObjectCache:
             self._size -= len(old)
         self._pages[pkey] = data
         self._size += len(data)
+        self._obj_pages.setdefault(pkey[0], set()).add(pkey[1])
         while self._size > self.capacity and self._pages:
-            _, evicted = self._pages.popitem(last=False)
+            epk, evicted = self._pages.popitem(last=False)
             self._size -= len(evicted)
+            self._forget_page(epk)
+
+    def _forget_page(self, pkey: Tuple[str, int]) -> None:
+        pages = self._obj_pages.get(pkey[0])
+        if pages is not None:
+            pages.discard(pkey[1])
+            if not pages:
+                del self._obj_pages[pkey[0]]
+
+    def invalidate_object(self, key: str) -> int:
+        """Drop every resident page and size/readahead hint for ``key``.
+
+        Required before an object key can be deleted or recreated: pages are
+        keyed by (object, page#) with no versioning, so a stale page would
+        silently serve the OLD bytes to every later read (the pre-§13 gap —
+        load-bearing once the GC reaper deletes objects, and for any backend
+        caller that overwrites a key in place). Returns pages dropped."""
+        self.invalidations += 1
+        dropped = 0
+        for p in sorted(self._obj_pages.pop(key, ())):
+            page = self._pages.pop((key, p), None)
+            if page is not None:
+                self._size -= len(page)
+                dropped += 1
+        self._obj_size.pop(key, None)
+        self._last_end.pop(key, None)
+        return dropped
 
     def _fetch_pages(self, key: str, p_lo: int, p_hi: int) -> None:
         """ONE ranged GET for pages [p_lo, p_hi); splits the result into pages."""

@@ -61,9 +61,12 @@ class Replica:
             try:
                 self.state.apply(entry.cmd)
             except Exception:
-                # Deterministic command failures (e.g. ForkBlocked) are part of
-                # the state machine contract: every replica fails identically
-                # and the state is unchanged; the leader surfaces the error.
+                # Deterministic command failures (e.g. ForkBlocked) are part
+                # of the state machine contract: every replica fails
+                # identically, leaving identical state (a failed append still
+                # registers its orphaned PUT object for GC, §13, but does so
+                # before raising — deterministically); the leader surfaces
+                # the error.
                 pass
         if self.commit_index < index:
             self.commit_index = index
@@ -229,7 +232,14 @@ class MetadataService:
                               m.stands_for, sorted(m.hli_children),
                               sorted(m.promotable_forks.items()),
                               m.index.content_digest()))
-            return pickle.dumps(items)
+            # segment-GC manifests (§13): replicas must agree not only on the
+            # log forest but on refcounts, the candidate queue (order
+            # included — it decides future reclaim order), and the reclaimed
+            # set, or a failover would reclaim different objects
+            gc_items = (sorted(state.object_refs.items()),
+                        tuple(state._reclaimable),
+                        sorted(state.reclaimed))
+            return pickle.dumps((items, gc_items))
 
         blobs = set()
         for r in self.replicas:

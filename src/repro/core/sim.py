@@ -121,6 +121,8 @@ class OpTally:
     bytes_get: int = 0   # bytes actually fetched from the store
     meta_cached: int = 0  # metadata resolutions served by a flattened view (§11)
     meta_slow: int = 0    # resolutions through the exact chain resolver
+    deletes: int = 0          # store object deletes (GC reaper, §13)
+    bytes_reclaimed: int = 0  # bytes those deletes freed in shared storage
     replays: int = 0      # zero-copy re-appends (rebase replay, §12)
     spec_conflicts: int = 0   # speculative commit conflicts (§12)
     spec_rebases: int = 0     # auto-rebases (§12)
@@ -140,6 +142,8 @@ class OpTally:
                    bytes_get=getattr(system.store, "bytes_read", 0),
                    meta_cached=view_stats.cached_reads,
                    meta_slow=view_stats.slow_reads,
+                   deletes=getattr(system.store, "delete_count", 0),
+                   bytes_reclaimed=getattr(system.store, "bytes_deleted", 0),
                    replays=sum(getattr(b, "replays", 0)
                                for b in getattr(system, "brokers", [])),
                    spec_conflicts=spec.conflicts,
@@ -155,6 +159,8 @@ class OpTally:
                        bytes_get=self.bytes_get - since.bytes_get,
                        meta_cached=self.meta_cached - since.meta_cached,
                        meta_slow=self.meta_slow - since.meta_slow,
+                       deletes=self.deletes - since.deletes,
+                       bytes_reclaimed=self.bytes_reclaimed - since.bytes_reclaimed,
                        replays=self.replays - since.replays,
                        spec_conflicts=self.spec_conflicts - since.spec_conflicts,
                        spec_rebases=self.spec_rebases - since.spec_rebases,
@@ -181,6 +187,9 @@ class ServiceTimes:
     store_get_base: float = 0.6e-3         # S3-like ranged GET (charged PER GET:
     store_get_per_kb: float = 1e-6         # Broker._book books each coalesced
                                            # ranged GET, not whole-object fills)
+    store_delete_base: float = 0.5e-3      # S3-like object DELETE (GC reaper,
+                                           # §13; size-independent like real
+                                           # object stores)
     disk_read_per_kb: float = 3e-6         # Kafka-like local disk
     disk_seek: float = 80e-6
     metadata_op: float = 12e-6             # sequencing round at metadata layer

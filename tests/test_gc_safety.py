@@ -1,0 +1,564 @@
+"""Storage-safety harness for lineage-aware segment GC (DESIGN.md §13).
+
+Two property suites plus directed units and fault injection:
+
+* **Safety** — GC never deletes a reachable byte: under arbitrary
+  fork/append/promote/squash/speculate/gc interleavings (including mid-scan
+  and under promotable holds), every position readable through any live log
+  resolves to bytes present in shared storage, and the metadata layer's
+  incremental manifests always equal a from-scratch recount
+  (``oracle.check_manifest_audit``).
+* **Liveness** — after churn quiesces and GC drains, unreachable bytes are
+  reclaimed and reclaimed == dead: the store holds exactly the objects some
+  log (live or frozen) still references (``oracle.check_storage_liveness``).
+
+Fault injection reuses the replicated-metadata machinery of
+``test_raft_fault_tolerance.py``: a reaper crash mid-reap, leader failover
+and snapshot install with GC events pending — replicas must converge on the
+identical reclaimed set (``check_convergence`` digests cover the manifests).
+"""
+
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BoltSystem, ForkBlocked, GCConfig, GroupCommitConfig,
+                        InvalidOperation)
+from repro.core.errors import AgileLogError
+from repro.core.oracle import (OracleModel, check_manifest_audit,
+                               check_storage_liveness, check_storage_safety,
+                               recount_object_refs)
+
+
+def _data_objects(system):
+    return [k for k in system.store.list()
+            if k.startswith(("obj-", "seg-"))]
+
+
+# ---------------------------------------------------------------------------
+# manifests: directed units
+# ---------------------------------------------------------------------------
+
+def test_append_registers_manifest_and_squash_hands_segments_to_gc():
+    system = BoltSystem(n_brokers=3)
+    root = system.create_log("r")
+    root.append(b"keep")
+    fork = root.cfork()
+    fork.append(b"fork-private")
+    state = system.metadata.state
+    check_manifest_audit(state)
+    assert state.gc_tracked() == 2 and state.gc_pending() == 0
+    fork.squash()
+    assert state.gc_pending() == 1            # dead-lineage event enqueued
+    dead = system.gc_quantum()
+    assert len(dead) == 1 and not system.store.exists(dead[0])
+    assert root.read(0, 1) == [b"keep"]
+    check_storage_liveness(system)
+
+
+def test_group_commit_segment_lives_until_every_log_in_it_dies():
+    """Group commit makes objects multi-log (§9): one segment holds records
+    of several logs, so liveness is a refcount, not ownership."""
+    system = BoltSystem(group_commit=GroupCommitConfig(max_records=100))
+    root = system.create_log("r")
+    root.append(b"base").wait()
+    a = root.cfork()          # forks of one parent co-locate on one broker
+    b = root.cfork()
+    before = set(_data_objects(system))
+    a.append(b"aaaa")
+    b.append(b"bbbb")
+    system.flush()            # ONE segment object carries both forks' records
+    segs = sorted(set(_data_objects(system)) - before)
+    assert len(segs) == 1
+    a.squash()
+    system.gc()
+    assert system.store.exists(segs[0])       # b still references the segment
+    assert b.read(1, 2) == [b"bbbb"]
+    b.squash()
+    system.gc()
+    assert not system.store.exists(segs[0])   # last reference died
+    check_storage_liveness(system)
+
+
+def test_failed_append_orphan_put_is_reclaimed():
+    """A deterministically-failed append already PUT its object — zero
+    manifest references from birth, reclaimed on the next quantum."""
+    system = BoltSystem(n_brokers=3)
+    root = system.create_log("r")
+    root.append(b"base")
+    sib = root.cfork()                        # non-promotable, created first
+    hold = root.cfork(promotable=True)        # now sib is capped (§4.1)
+    before = set(_data_objects(system))
+    with pytest.raises(ForkBlocked):
+        sib.append(b"doomed")
+    orphan = set(_data_objects(system)) - before
+    assert len(orphan) == 1                   # the PUT survived the failure
+    state = system.metadata.state
+    check_manifest_audit(state)
+    assert state.gc_pending() == 1
+    dead = system.gc_quantum()
+    assert set(dead) == orphan
+    hold.squash()
+    system.gc()
+    check_storage_liveness(system)
+
+
+@pytest.mark.parametrize("mode", ["copy", "splice"])
+def test_promote_keeps_winner_segments_and_reclaims_the_squashed_rival(mode):
+    system = BoltSystem(n_brokers=3, promote_mode=mode)
+    root = system.create_log("r")
+    root.append(b"p0")
+    win = root.cfork(promotable=True)
+    lose = root.cfork(promotable=True)        # same fork point: both allowed
+    win.append(b"winner")
+    lose.append(b"loser")
+    win.promote()                             # first promote squashes `lose`
+    state = system.metadata.state
+    check_manifest_audit(state)
+    dead = system.gc()
+    assert dead.objects_reclaimed == 1        # the rival's private segment
+    assert root.read(0, 2) == [b"p0", b"winner"]
+    check_storage_safety(system)
+    check_storage_liveness(system)
+
+
+def test_frozen_chain_gc_releases_segments_only_at_the_last_dependent():
+    system = BoltSystem(n_brokers=3)
+    root = system.create_log("r")
+    root.append(b"p0")
+    fork = root.cfork()
+    fork.append(b"frozen-payload")
+    snap = fork.sfork()                       # positional dependent of `fork`
+    fork.squash()                             # fork must FREEZE, not die
+    state = system.metadata.state
+    check_manifest_audit(state)
+    system.gc()
+    assert snap.read(0, 2) == [b"p0", b"frozen-payload"]   # safety via chain
+    check_storage_safety(system)
+    snap.squash()                             # chain GC releases the segment
+    assert state.gc_pending() >= 1
+    system.gc()
+    check_storage_liveness(system)
+    assert root.read(0, 1) == [b"p0"]
+
+
+def test_naive_variant_manifests_count_copies():
+    system = BoltSystem(n_brokers=2, cf_mode="naive")
+    root = system.create_log("r")
+    root.append(b"a")
+    fork = root.cfork()                       # copies propagate eagerly
+    root.append(b"b")
+    state = system.metadata.state
+    check_manifest_audit(state)
+    fork.squash()
+    check_manifest_audit(state)
+    system.gc()
+    assert root.read(0, 2) == [b"a", b"b"]
+    check_storage_liveness(system)
+
+
+def test_collect_drains_beyond_the_quantum_batch():
+    """Regression: ``system.gc()`` must be an UNBOUNDED drain — the
+    configured batch paces incremental quanta only, never a drain."""
+    system = BoltSystem(n_brokers=3, gc=GCConfig(batch=4))
+    root = system.create_log("r")
+    root.append(b"keep")
+    _churn(root, 30)                          # 30 dead objects >> batch=4
+    assert len(system.gc_quantum()) == 4      # quantum honors the batch
+    stats = system.gc()
+    assert stats.objects_reclaimed == 30 and stats.pending == 0
+    check_storage_liveness(system)
+
+
+def test_candidate_queue_stays_proportional_to_dead_objects():
+    """Regression: successful appends must not enqueue stale candidates —
+    the queue (scanned by gc_pending/auto nudges) tracks dead objects only."""
+    system = BoltSystem(n_brokers=3)
+    root = system.create_log("r")
+    for i in range(50):
+        root.append(f"r{i}".encode())
+    state = system.metadata.state
+    assert len(state._reclaimable) == 0       # 50 live appends, empty queue
+    f = root.cfork()
+    f.append(b"dies")
+    f.squash()
+    assert len(state._reclaimable) == 1
+    system.gc()
+    assert len(state._reclaimable) == 0
+    check_storage_liveness(system)
+
+
+def test_gc_preserves_withheld_suffix_under_promotable_hold():
+    """Positions withheld by a hold (§4.1) are unreadable *now* but become
+    readable at promote — their segments must survive any GC in between."""
+    system = BoltSystem(n_brokers=3)
+    root = system.create_log("r")
+    root.append(b"base")
+    child = root.cfork(promotable=True)
+    r = root.append(b"hidden-1")
+    root.append(b"hidden-2")
+    assert r.withheld
+    check_storage_safety(system)              # resolves the withheld suffix too
+    assert system.gc().objects_reclaimed == 0
+    child.promote()
+    assert root.read(0, 3) == [b"base", b"hidden-1", b"hidden-2"]
+    check_storage_liveness(system)
+
+
+# ---------------------------------------------------------------------------
+# session hand-off (satellites): eager abort, close(), rebase pinning
+# ---------------------------------------------------------------------------
+
+def test_aborted_session_exclusive_bytes_reclaimed_on_next_quantum():
+    system = BoltSystem(n_brokers=3)          # manual reaper
+    root = system.create_log("r")
+    root.append(b"keep")
+    with root.speculate() as s:
+        s.append(b"private-1")
+        s.append(b"private-2")
+        s.abort()                             # hands the suffix to GC eagerly
+    state = system.metadata.state
+    assert state.gc_pending() == 2
+    dead = system.gc_quantum()
+    assert len(dead) == 2
+    assert all(not system.store.exists(o) for o in dead)
+    assert root.read(0, 1) == [b"keep"]
+    check_storage_liveness(system)
+
+
+def test_auto_gc_reclaims_abort_suffix_without_explicit_drain():
+    system = BoltSystem(n_brokers=3, gc=True)
+    root = system.create_log("r")
+    root.append(b"keep")
+    with root.speculate() as s:
+        s.append(b"junk")                     # implicit abort at block exit
+    assert system.metadata.state.gc_pending() == 0   # nudge already reclaimed
+    assert len(_data_objects(system)) == 1
+    check_storage_liveness(system)
+
+
+def test_close_hands_fork_suffix_to_gc_and_spares_roots():
+    system = BoltSystem(n_brokers=3, gc=True)
+    root = system.create_log("r")
+    root.append(b"keep")
+    fork = root.cfork()
+    fork.append(b"fork-private")
+    fork.close()
+    assert len(_data_objects(system)) == 1    # suffix reclaimed by the nudge
+    fork.close()                              # idempotent: fork already gone
+    root.close()                              # roots only flush, never squash
+    assert root.read(0, 1) == [b"keep"]
+    check_storage_liveness(system)
+
+
+def test_auto_gc_inside_rebase_window_spares_pinned_suffix():
+    """The squash->replay window (§12): with auto GC, the squash's own nudge
+    runs a quantum while the suffix segments have ZERO manifest references —
+    only the session's pins (carried in the gc command) keep them alive for
+    the zero-copy replay."""
+    system = BoltSystem(n_brokers=3, gc=True)
+    root = system.create_log("r")
+    root.append(b"p0")
+    with root.speculate() as s:
+        s.append(b"s0")
+        root.append(b"c0")                    # forces a conflict + rebase
+        res = s.commit()
+    assert res.rebases == 1 and res.replayed == 1
+    assert root.read(0, 3) == [b"p0", b"c0", b"s0"]
+    system.gc()
+    check_storage_safety(system)
+    check_storage_liveness(system)
+    assert system.gc_stats.pinned == 0        # pins released after the replay
+
+
+def test_gc_mid_scan_keeps_remaining_batches_intact():
+    system = BoltSystem(n_brokers=3)
+    root = system.create_log("r")
+    want = [f"r{i}".encode() for i in range(100)]
+    root.append_batch(want)
+    it = root.scan(batch=10)
+    got = [next(it) for _ in range(35)]       # mid-scan cursor at 35
+    for i in range(4):                        # churn + reclaim under the scan
+        f = root.cfork()
+        f.append(b"junk" * 50)
+        f.squash()
+    assert system.gc().objects_reclaimed == 4
+    got.extend(it)                            # remaining batches re-resolve
+    assert got == want
+    check_storage_liveness(system)
+
+
+# ---------------------------------------------------------------------------
+# property suite: random interleavings vs the oracle
+# ---------------------------------------------------------------------------
+
+class GCTraceRunner:
+    """Drive one BoltSystem and the brute-force OracleModel through the same
+    random trace (appends, forks, promote, squash, reads, incremental GC
+    quanta), requiring identical observable behavior AND the §13 storage
+    invariants at every step. Slot i maps system handle <-> oracle id (the
+    raw ids drift: splice promotes mint frozen stand-in ids)."""
+
+    def __init__(self, seed: int, promote_mode: str):
+        self.rng = random.Random(seed)
+        self.system = BoltSystem(n_brokers=3, promote_mode=promote_mode)
+        self.oracle = OracleModel()
+        root = self.system.create_log("r")
+        oid = self.oracle.create_root("r")
+        self.slots = {0: (root, oid)}
+        self._next_slot = 1
+        self._rec = 0
+
+    def _pick(self):
+        return self.rng.choice(sorted(self.slots))
+
+    def _both(self, sys_fn, ora_fn):
+        """Run both sides; error types must match; returns (sys, ora) results."""
+        res = []
+        errs = []
+        for fn in (sys_fn, ora_fn):
+            try:
+                res.append(fn())
+                errs.append(None)
+            except AgileLogError as e:
+                res.append(None)
+                errs.append(type(e).__name__)
+        assert errs[0] == errs[1], f"error mismatch: {errs}"
+        return res[0], res[1]
+
+    def _prune(self):
+        """Drop slots whose log died (squash subtree / promote); the live
+        slot sets must agree between system and oracle."""
+        state = self.system.metadata.state
+        live_sys = {s for s, (log, _o) in self.slots.items()
+                    if log.log_id in state.logs and state.logs[log.log_id].alive}
+        live_ora = {s for s, (_l, oid) in self.slots.items()
+                    if oid in self.oracle.logs}
+        assert live_sys == live_ora, f"liveness drift: {live_sys} != {live_ora}"
+        self.slots = {s: v for s, v in self.slots.items() if s in live_sys}
+
+    def step(self):
+        rng = self.rng
+        slot = self._pick()
+        log, oid = self.slots[slot]
+        op = rng.random()
+        if op < 0.40:
+            recs = [f"x{self._rec + i}".encode() * rng.randint(1, 8)
+                    for i in range(rng.randint(1, 3))]
+            self._rec += len(recs)
+            r_sys, r_ora = self._both(
+                lambda: log.append_batch(recs).positions(),
+                lambda: self.oracle.append(oid, recs))
+            assert r_sys == r_ora          # positions, or None when withheld
+        elif op < 0.58:
+            promotable = rng.random() < 0.4
+            f_sys, f_ora = self._both(
+                lambda: log.cfork(promotable=promotable),
+                lambda: self.oracle.cfork(oid, promotable))
+            if f_sys is not None:
+                self.slots[self._next_slot] = (f_sys, f_ora)
+                self._next_slot += 1
+        elif op < 0.68:
+            past = None
+            tail = self.oracle.tail(oid)
+            if tail > 0 and rng.random() < 0.5:
+                past = rng.randrange(tail)
+            f_sys, f_ora = self._both(
+                lambda: log.sfork(past=past),
+                lambda: self.oracle.sfork(oid, past))
+            if f_sys is not None:
+                self.slots[self._next_slot] = (f_sys, f_ora)
+                self._next_slot += 1
+        elif op < 0.76:
+            self._both(lambda: log.promote(), lambda: self.oracle.promote(oid))
+        elif op < 0.84:
+            self._both(lambda: log.squash(), lambda: self.oracle.squash(oid))
+        elif op < 0.95:
+            tail = self.oracle.tail(oid)
+            lo = rng.randint(0, tail)
+            hi = rng.randint(lo, tail)
+            r_sys, r_ora = self._both(lambda: log.read(lo, hi),
+                                      lambda: self.oracle.read(oid, lo, hi))
+            assert r_sys == r_ora, f"content mismatch on slot {slot} [{lo},{hi})"
+        else:
+            self.system.gc_quantum(limit=rng.randint(1, 4))
+        self._prune()
+        check_manifest_audit(self.system.metadata.state)
+
+    def finish(self):
+        for slot in sorted(self.slots):
+            log, oid = self.slots[slot]
+            assert log.tail == self.oracle.tail(oid)
+            assert log.visible_tail == self.oracle.visible_tail(oid)
+        check_storage_safety(self.system)
+        # quiesce: release every hold so liveness is decidable, then drain
+        state = self.system.metadata.state
+        for slot in sorted(self.slots, reverse=True):
+            log, oid = self.slots[slot]
+            meta = state.logs.get(log.log_id)
+            if meta is not None and meta.alive and meta.promotable:
+                try:
+                    log.squash()
+                    self.oracle.squash(oid)
+                except AgileLogError:
+                    pass
+        self._prune()
+        self.system.gc()
+        check_manifest_audit(state)
+        check_storage_safety(self.system)
+        check_storage_liveness(self.system)
+        for slot in sorted(self.slots):      # reclaim deleted nothing readable
+            log, oid = self.slots[slot]
+            hi = self.oracle.visible_tail(oid)
+            assert log.read(0, hi) == self.oracle.read(oid, 0, hi)
+
+
+@pytest.mark.parametrize("promote_mode", ["copy", "splice"])
+@given(seed=st.integers(min_value=0, max_value=100_000))
+@settings(max_examples=12, deadline=None)
+def test_gc_safety_under_random_interleavings(promote_mode, seed):
+    runner = GCTraceRunner(seed, promote_mode)
+    for _ in range(45):
+        runner.step()
+    runner.finish()
+
+
+@given(seed=st.integers(min_value=0, max_value=100_000),
+       flush_every=st.integers(min_value=2, max_value=6))
+@settings(max_examples=10, deadline=None)
+def test_gc_safety_under_group_commit_churn(seed, flush_every):
+    """Multi-log segments (§9) under fork churn: staged appends across many
+    logs share segment objects; squashes must only free a segment once its
+    LAST referencing log dies. Content equivalence for group commit is
+    test_group_commit.py's job — here we pin the storage invariants."""
+    rng = random.Random(seed)
+    system = BoltSystem(n_brokers=3,
+                        group_commit=GroupCommitConfig(max_records=10_000))
+    root = system.create_log("r")
+    root.append(b"base").wait()
+    live = [root.cfork() for _ in range(3)]
+    state = system.metadata.state
+    for i in range(40):
+        op = rng.random()
+        if op < 0.55 and live:
+            rng.choice(live).append(f"x{i}".encode() * rng.randint(1, 6))
+        elif op < 0.70:
+            live.append(root.cfork())
+        elif op < 0.85 and live:
+            victim = live.pop(rng.randrange(len(live)))
+            victim.squash()                    # flushes its staged records first
+        else:
+            system.gc_quantum(limit=rng.randint(1, 3))
+        if i % flush_every == 0:
+            system.flush()
+        check_manifest_audit(state)
+    system.flush()
+    for f in live:
+        f.squash()
+    system.gc()
+    check_storage_safety(system)
+    check_storage_liveness(system)
+    assert root.read(0, 1) == [b"base"]
+
+
+# ---------------------------------------------------------------------------
+# fault injection (reuses the test_raft_fault_tolerance machinery)
+# ---------------------------------------------------------------------------
+
+def _churn(root, n=4):
+    """n speculation sessions that all abort: n dead private segments."""
+    for i in range(n):
+        with root.speculate() as s:
+            s.append(f"churn-{i}".encode() * 8)
+            s.abort()
+
+
+def test_reaper_crash_mid_reap_resync_converges_store():
+    system = BoltSystem(n_brokers=3)
+    root = system.create_log("r")
+    root.append(b"keep")
+    _churn(root, 6)
+    state = system.metadata.state
+    assert state.gc_pending() == 6
+    # consensus decides the full reclaimed set; the reaper dies after
+    # applying only two of the deletes
+    dead = system.metadata.propose(("gc", None, ()))
+    assert len(dead) == 6
+    for obj in dead[:2]:
+        system.store.delete(obj)
+    lingering = [o for o in dead if system.store.exists(o)]
+    assert len(lingering) == 4
+    check_storage_safety(system)              # safety never depended on reaping
+    # a restarted reaper replays reclaimed ∩ store (deletes are idempotent)
+    recovered = system.collector.resync()
+    assert sorted(recovered) == sorted(lingering)
+    check_storage_liveness(system)
+    assert system.metadata.check_convergence()
+
+
+def test_leader_failover_with_pending_gc_reclaims_identically():
+    system = BoltSystem(n_brokers=3, n_meta_replicas=3)
+    root = system.create_log("r")
+    root.append(b"keep")
+    _churn(root, 5)
+    state = system.metadata.state
+    assert state.gc_pending() == 5            # events pending at failover
+    system.metadata.fail_replica(system.metadata.leader_id)
+    dead = system.gc_quantum(limit=3)         # partial quantum post-failover
+    assert len(dead) == 3
+    _churn(root, 2)
+    system.gc()
+    assert system.metadata.check_convergence()
+    check_storage_liveness(system)
+    assert root.read(0, 1) == [b"keep"]
+
+
+def test_snapshot_install_with_gc_state_converges():
+    system = BoltSystem(n_brokers=3, n_meta_replicas=3, snapshot_every=6)
+    root = system.create_log("r")
+    root.append(b"keep")
+    _churn(root, 3)
+    victim = (system.metadata.leader_id + 1) % 3
+    system.metadata.fail_replica(victim)
+    system.gc_quantum(limit=2)                # reclaim while the replica is down
+    _churn(root, 3)
+    system.gc_quantum(limit=2)
+    system.metadata.recover_replica(victim)   # snapshot install + suffix replay
+    r = system.metadata.replicas[victim]
+    assert r.state.reclaimed == system.metadata.state.reclaimed
+    assert r.state.object_refs == system.metadata.state.object_refs
+    assert system.metadata.check_convergence()
+    system.gc()
+    check_storage_liveness(system)
+
+
+def test_convergence_digest_covers_gc_state():
+    """A replica diverging ONLY in its reclaimed set (same log forest) must
+    fail the convergence check — the §13 digest extension."""
+    system = BoltSystem(n_brokers=2)
+    root = system.create_log("r")
+    root.append(b"a")
+    assert system.metadata.check_convergence()
+    follower = next(r for r in system.metadata.replicas
+                    if r.rid != system.metadata.leader_id)
+    follower.state.reclaimed.add("phantom-object")
+    assert not system.metadata.check_convergence()
+
+
+def test_gc_is_deterministic_across_replicas_and_restart():
+    """The reclaimed sets on every replica are identical after quanta issued
+    around failures, and a from-snapshot replica replays to the same set."""
+    system = BoltSystem(n_brokers=3, n_meta_replicas=3, snapshot_every=4)
+    root = system.create_log("r")
+    root.append(b"keep")
+    for round_ in range(3):
+        _churn(root, 2)
+        system.gc_quantum(limit=3)
+    sets = {frozenset(r.state.reclaimed)
+            for r in system.metadata.replicas if r.alive
+            if (r.apply_pending() or True)}
+    assert len(sets) == 1
+    want = recount_object_refs(system.metadata.state)
+    for r in system.metadata.replicas:
+        assert recount_object_refs(r.state) == want

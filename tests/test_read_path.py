@@ -268,6 +268,41 @@ def test_sequential_readahead_reduces_gets():
     assert with_ra.ranged_gets * 4 <= without.ranged_gets
 
 
+def test_invalidate_object_drops_stale_pages_and_hints():
+    """Regression (ISSUE 5 satellite): pages are keyed (object, page#) with
+    no versioning, so a deleted-then-recreated key kept serving the OLD
+    bytes from cache — load-bearing once the GC reaper deletes objects.
+    ``invalidate_object`` must drop the pages AND the size/readahead hints
+    (a stale size hint would truncate reads of a larger recreation)."""
+    store = MemoryObjectStore()
+    store.put("k", b"old" * 1000)                        # 3000 bytes
+    cache = LRUObjectCache(store, capacity_bytes=1 << 20, page_bytes=1024)
+    assert cache.get("k", 0, 3000) == b"old" * 1000      # warm: 3 pages + size
+    store.delete("k")
+    store.put("k", b"NEWBYTES" * 1000)                   # 8000 bytes, same key
+    # without invalidation the stale pages would still serve b"old"...
+    dropped = cache.invalidate_object("k")
+    assert dropped == 3 and cache.invalidations == 1
+    assert cache.get("k", 0, 8000) == b"NEWBYTES" * 1000
+    # ...and the stale 3000-byte size hint must not clip the whole-object get
+    assert cache.get("k") == b"NEWBYTES" * 1000
+    # invalidating an uncached key is a harmless no-op
+    assert cache.invalidate_object("never-seen") == 0
+
+
+def test_invalidate_object_keeps_lru_size_accounting_consistent():
+    store = MemoryObjectStore()
+    for i in range(8):
+        store.put(f"o{i}", bytes([i]) * 4096)
+    cache = LRUObjectCache(store, capacity_bytes=16 << 10, page_bytes=4096)
+    for i in range(8):                       # capacity 4 pages: evictions run
+        cache.get(f"o{i}", 0, 4096)
+    assert cache._size == sum(len(p) for p in cache._pages.values())
+    for i in range(8):
+        cache.invalidate_object(f"o{i}")
+    assert cache._size == 0 and not cache._pages and not cache._obj_pages
+
+
 # ---------------------------------------------------------------------------
 # broker + system level
 # ---------------------------------------------------------------------------
