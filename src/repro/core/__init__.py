@@ -9,6 +9,9 @@ Layers (bottom-up):
   broker      — stateless brokers (append batching, object cache, DES hooks)
   gc          — lineage-aware segment garbage collection: consensus-ordered
                 manifests + broker-side reaper (DESIGN.md §13)
+  compact     — segment compaction + cold tiering: live-byte manifests,
+                consensus-ordered index swaps, age-based demotion into a
+                compressed store class (DESIGN.md §14)
   api         — the agent-session client API (receipts, speculation sessions,
                 tailing subscriptions — DESIGN.md §12) + BoltSystem wiring
   sim         — deterministic DES used by isolation benchmarks
@@ -17,13 +20,18 @@ Layers (bottom-up):
 from .api import (AgileLog, AppendReceipt, BoltSystem, CommitResult,
                   Speculation, Subscription)
 from .broker import GroupCommitConfig
+from .compact import (CompactionConfig, Compactor, CompactStats, TieringConfig,
+                      TierManager, TierStats)
 from .errors import (AgileLogError, ConflictError, ForkBlocked,
                      InvalidOperation, UnknownLog)
 from .gc import GarbageCollector, GCConfig, GCStats
+from .objectstore import TieredObjectStore
 
 __all__ = [
     "AgileLog", "AppendReceipt", "BoltSystem", "CommitResult", "Speculation",
     "Subscription", "GroupCommitConfig", "GarbageCollector", "GCConfig",
-    "GCStats", "AgileLogError", "ConflictError", "ForkBlocked",
+    "GCStats", "CompactionConfig", "Compactor", "CompactStats",
+    "TieringConfig", "TierManager", "TierStats", "TieredObjectStore",
+    "AgileLogError", "ConflictError", "ForkBlocked",
     "InvalidOperation", "UnknownLog",
 ]

@@ -49,9 +49,11 @@ from typing import (Callable, Dict, Iterator, List, Optional, Sequence, Set,
                     Union)
 
 from .broker import Broker, GroupCommitConfig, PendingAppend
+from .compact import (Compactor, CompactionConfig, CompactStats, TierManager,
+                      TieringConfig, TierStats)
 from .errors import AgileLogError, ConflictError, InvalidOperation, UnknownLog
 from .gc import GarbageCollector, GCConfig, GCStats
-from .objectstore import MemoryObjectStore, ObjectStore
+from .objectstore import MemoryObjectStore, ObjectStore, TieredObjectStore
 from .raft import MetadataService
 from .sim import SpecStats
 
@@ -304,6 +306,10 @@ class Speculation:
         self._state = "open"          # open | committed | aborted
         self.rebases = 0
         self.replayed = 0
+        # registered while open so the §14 compactor can exclude this
+        # session's durable receipt segments from rewrite candidates: a
+        # rebase replays those (object, offsets) tuples verbatim
+        parent.system._live_specs.add(self)
 
     # -- proxied log surface -------------------------------------------------
     def _info(self):
@@ -378,6 +384,7 @@ class Speculation:
             if outcome[0] == "ok":
                 base, count = outcome[1]
                 self._state = "committed"
+                system._live_specs.discard(self)
                 self._stats.commits += 1
                 system._gc_nudge()   # promote may have squashed rivals (§13)
                 return CommitResult(log_id=self.parent.log_id, base=base,
@@ -463,6 +470,7 @@ class Speculation:
 
     def _abort(self, squash: bool) -> None:
         self._state = "aborted"
+        self.parent.system._live_specs.discard(self)
         self._stats.aborts += 1
         if squash:
             try:
@@ -500,7 +508,9 @@ class BoltSystem:
                  readahead_bytes: int = 256 << 10,
                  view_cache: bool = True,
                  pipeline_apply: bool = True,
-                 gc: Union[None, bool, int, GCConfig] = None) -> None:
+                 gc: Union[None, bool, int, GCConfig] = None,
+                 compaction: Union[None, bool, int, CompactionConfig] = None,
+                 tiering: Union[None, bool, int, TieringConfig] = None) -> None:
         if group_commit is True:
             group_commit = GroupCommitConfig()
         elif group_commit is False or group_commit == 0:
@@ -513,7 +523,29 @@ class BoltSystem:
             raise TypeError(f"group_commit must be None, bool, int, or "
                             f"GroupCommitConfig, got {type(group_commit).__name__}")
         self.group_commit: Optional[GroupCommitConfig] = group_commit
-        self.store = store if store is not None else MemoryObjectStore()
+        # -- cold tiering (DESIGN.md §14). Same shape as `gc`: None/False ->
+        # tiering off (plain store, TierManager quanta are no-ops), True ->
+        # tiered store + background demotion quanta, int -> auto with that
+        # min demotion age, TieringConfig -> as given (store is tiered even
+        # when auto is off, for explicit demote()/resync() driving).
+        if tiering is True:
+            tiering = TieringConfig(auto=True)
+        elif isinstance(tiering, bool) or tiering is None:   # False or None
+            tiering = None
+        elif isinstance(tiering, int):
+            if tiering <= 0:
+                raise ValueError(f"tiering min_age must be positive, got {tiering}")
+            tiering = TieringConfig(min_age=tiering, auto=True)
+        elif not isinstance(tiering, TieringConfig):
+            raise TypeError(f"tiering must be None, bool, int, or TieringConfig, "
+                            f"got {type(tiering).__name__}")
+        if store is None:
+            store = TieredObjectStore() if tiering is not None else MemoryObjectStore()
+        elif tiering is not None and not isinstance(store, TieredObjectStore):
+            raise TypeError(
+                f"tiering requires a TieredObjectStore (two store classes, "
+                f"§14), got {type(store).__name__}")
+        self.store = store
         self.metadata = MetadataService(
             n_replicas=n_meta_replicas, snapshot_every=snapshot_every,
             pipeline_apply=pipeline_apply,
@@ -546,6 +578,29 @@ class BoltSystem:
             raise TypeError(f"gc must be None, bool, int, or GCConfig, "
                             f"got {type(gc).__name__}")
         self.collector = GarbageCollector(self, gc)
+        # -- segment compaction (DESIGN.md §14). Same shape as `gc`: None ->
+        # manual (explicit system.compact()/compact_quantum()), True -> auto
+        # quanta on churn hand-off points, int -> auto with that per-quantum
+        # source batch, or a full CompactionConfig.
+        if compaction is True:
+            compaction = CompactionConfig(auto=True)
+        elif compaction is False or compaction is None:
+            compaction = CompactionConfig()
+        elif isinstance(compaction, int):
+            if compaction <= 0:
+                raise ValueError(
+                    f"compaction batch size must be positive, got {compaction}")
+            compaction = CompactionConfig(batch=compaction, auto=True)
+        elif not isinstance(compaction, CompactionConfig):
+            raise TypeError(f"compaction must be None, bool, int, or "
+                            f"CompactionConfig, got {type(compaction).__name__}")
+        self.compactor = Compactor(self, compaction)
+        self.tiers = TierManager(self, tiering or TieringConfig())
+        self._tiering_auto = tiering is not None and tiering.auto
+        self._live_specs: Set[Speculation] = set()   # open sessions (§14 exclusion)
+        if isinstance(self.store, TieredObjectStore):
+            for b in self.brokers:
+                b.tiering = self.tiers   # read-path promotion hook (§14)
 
     # -- group commit (DESIGN.md §9) ------------------------------------------------
     def flush(self) -> None:
@@ -575,10 +630,57 @@ class BoltSystem:
         """Churn hand-off point (abort/close/squash/promote): in auto mode,
         run a quantum so dead suffixes are reclaimed as they die rather than
         at the next explicit drain. The pending check keeps no-op nudges from
-        spending a consensus round."""
+        spending a consensus round. Auto compaction and tier demotion ride
+        the same hand-off points (§14)."""
         if (self.collector.config.auto
                 and self.metadata.state.gc_pending() > 0):
             self.collector.quantum()
+        if self.compactor.config.auto and self.compactor.candidates():
+            self.compactor.quantum()
+        if self._tiering_auto:
+            self.tiers.demote_quantum()
+
+    # -- segment compaction + cold tiering (DESIGN.md §14) --------------------------
+    def compact(self, arrival: Optional[float] = None) -> CompactStats:
+        """Drain compaction: rewrite every object under the live-byte-ratio
+        threshold onto fresh compacted objects (one consensus-ordered
+        ``compact`` swap per batch) and hand the retired sources to the §13
+        reaper. Returns :class:`CompactStats`."""
+        return self.compactor.compact(arrival=arrival)
+
+    def compact_quantum(self, arrival: Optional[float] = None) -> List[str]:
+        """One incremental compaction step; returns the source object ids
+        retired by this quantum's swap ([] when idle or stale)."""
+        return self.compactor.quantum(arrival=arrival)
+
+    @property
+    def compact_stats(self) -> CompactStats:
+        return self.compactor.stats()
+
+    def demote(self, arrival: Optional[float] = None) -> TierStats:
+        """Drain tier demotion: move every age-eligible compacted object to
+        the cold store class (consensus-ordered). No-op on untiered stores."""
+        return self.tiers.demote(arrival=arrival)
+
+    def demote_quantum(self, arrival: Optional[float] = None) -> List[str]:
+        """One incremental demotion step; returns the object ids demoted."""
+        return self.tiers.demote_quantum(arrival=arrival)
+
+    @property
+    def tier_stats(self) -> TierStats:
+        return self.tiers.stats()
+
+    def _session_segments(self) -> Set[str]:
+        """Durable segment objects referenced by open speculation sessions'
+        receipts (§14): a rebase replay re-proposes these verbatim, so the
+        compactor must not rewrite them out from under the receipts."""
+        out: Set[str] = set()
+        for spec in self._live_specs:
+            for receipt in spec._suffix:
+                segment = receipt._pending.segment
+                if segment is not None:
+                    out.add(segment[0])
+        return out
 
     def __enter__(self) -> "BoltSystem":
         return self

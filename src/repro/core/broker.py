@@ -125,6 +125,10 @@ class Broker:
         self.appends = 0
         self.replays = 0
         self.reads = 0
+        # cold-tier hook (DESIGN.md §14): set by the system layer when the
+        # store is tiered; scan-shaped reads that touched cold objects are
+        # reported so the TierManager can promote them back to hot
+        self.tiering = None
 
     # -- data path ----------------------------------------------------------------
     def append(self, log_id: int, records: Sequence[bytes],
@@ -280,13 +284,17 @@ class Broker:
         the bytes *returned* but store GETs only on what was actually
         *fetched* (ranged GETs, not whole-object fills — DESIGN.md §10)."""
         g0, b0 = self.cache.ranged_gets, self.cache.bytes_fetched
+        cg0 = getattr(self.store, "cold_gets", 0)
+        cb0 = getattr(self.store, "cold_bytes_read", 0)
         blobs = self.cache.get_spans(spans)
         self.reads += 1
         done = self._book(arrival,
                           read_bytes=sum(len(b) for b in blobs),
                           fetch_bytes=self.cache.bytes_fetched - b0,
                           get_ops=self.cache.ranged_gets - g0,
-                          meta_cached=meta_cached)
+                          meta_cached=meta_cached,
+                          cold_get_ops=getattr(self.store, "cold_gets", 0) - cg0,
+                          cold_fetch_bytes=getattr(self.store, "cold_bytes_read", 0) - cb0)
         return blobs, done
 
     def _resolve_spans(self, log_id: int, lo: int, hi: int,
@@ -306,26 +314,49 @@ class Broker:
              arrival: Optional[float] = None) -> Tuple[List[bytes], float]:
         self._flush_if_staged(log_id)
         spans, meta_cached = self._resolve_spans(log_id, lo, hi, per_record=False)
-        return self._cached_read(spans, arrival, meta_cached)
+        out = self._cached_read(spans, arrival, meta_cached)
+        self._note_cold_scan(spans, hi - lo, arrival)
+        return out
 
     def read_records(self, log_id: int, lo: int, hi: int,
                      arrival: Optional[float] = None) -> Tuple[List[bytes], float]:
         """Read and return individual records (one span per record)."""
         self._flush_if_staged(log_id)
         spans, meta_cached = self._resolve_spans(log_id, lo, hi, per_record=True)
-        return self._cached_read(spans, arrival, meta_cached)
+        out = self._cached_read(spans, arrival, meta_cached)
+        self._note_cold_scan(spans, hi - lo, arrival)
+        return out
+
+    def _note_cold_scan(self, spans, n_records: int,
+                        arrival: Optional[float]) -> None:
+        """Readahead-aware promotion trigger (DESIGN.md §14): the read was
+        already served (byte-correct through whichever tier held the data);
+        if it was scan-shaped and touched cold objects, tell the tier
+        manager so the NEXT reads come from the hot class."""
+        tiers = self.tiering
+        if tiers is None:
+            return
+        is_cold = getattr(self.store, "is_cold", None)
+        if is_cold is None:
+            return
+        cold = {key for key, _off, _ln in spans if is_cold(key)}
+        if cold:
+            tiers.note_scan(cold, n_records, arrival)
 
     # -- DES accounting -----------------------------------------------------------
     def _book(self, arrival: Optional[float], write_bytes: int = 0,
               read_bytes: int = 0, fetch_bytes: Optional[int] = None,
               get_ops: Optional[int] = None,
-              meta_cached: bool = False) -> float:
+              meta_cached: bool = False,
+              cold_get_ops: int = 0, cold_fetch_bytes: int = 0) -> float:
         """`read_bytes` is what the client receives (broker CPU touches it);
         `fetch_bytes`/`get_ops` are the actual store traffic — cache hits cost
         no store time, and one coalesced ranged GET costs one `store_get_base`,
         however many spans it served. They default to the pre-cache model
         (every read is one whole GET) when not supplied. `meta_cached` books
-        the flattened-view lookup cost instead of the chain-walk one (§11)."""
+        the flattened-view lookup cost instead of the chain-walk one (§11).
+        `cold_get_ops`/`cold_fetch_bytes` split out the GETs the cold store
+        class served — those are charged at the archive rates (§14)."""
         if self.sim is None or arrival is None:
             return 0.0
         s = self.service
@@ -336,12 +367,17 @@ class Broker:
             fetch_bytes = read_bytes
         if get_ops is None:
             get_ops = 1 if fetch_bytes else 0
+        hot_ops = max(0, get_ops - cold_get_ops)
+        hot_bytes = max(0, fetch_bytes - cold_fetch_bytes)
         if self.store_resource is not None:
             if write_bytes:
                 t = self.store_resource.submit(t, s.store_put_base + s.store_put_per_kb * write_bytes / 1024)
-            if get_ops:
+            if hot_ops:
                 t = self.store_resource.submit(
-                    t, get_ops * s.store_get_base + s.store_get_per_kb * fetch_bytes / 1024)
+                    t, hot_ops * s.store_get_base + s.store_get_per_kb * hot_bytes / 1024)
+            if cold_get_ops:
+                t = self.store_resource.submit(
+                    t, cold_get_ops * s.cold_get_base + s.cold_get_per_kb * cold_fetch_bytes / 1024)
         t += (s.metadata_op_cached if meta_cached else s.metadata_op) + s.net_rtt
         return t
 
@@ -361,6 +397,46 @@ class Broker:
         t += s.metadata_op + s.net_rtt
         return t
 
+    def book_compact(self, arrival: Optional[float], read_bytes: int,
+                     write_bytes: int, n_gets: int) -> float:
+        """Book one compaction quantum on THIS broker (DESIGN.md §14): the
+        ranged reads of the live spans, the compacted-object PUT, and the
+        ``compact`` sequencing round. Like the GC reaper, the compactor runs
+        on its own broker so rewrite I/O never queues in front of the
+        latency-critical workload."""
+        if self.sim is None or arrival is None:
+            return 0.0
+        s = self.service
+        cpu_time = s.broker_cpu_per_req + s.broker_cpu_per_kb * (read_bytes + write_bytes) / 1024
+        t = self.cpu.submit(arrival, cpu_time)
+        if self.store_resource is not None:
+            if n_gets:
+                t = self.store_resource.submit(
+                    t, n_gets * s.store_get_base + s.store_get_per_kb * read_bytes / 1024)
+            if write_bytes:
+                t = self.store_resource.submit(
+                    t, s.store_put_base + s.store_put_per_kb * write_bytes / 1024)
+        t += s.metadata_op + s.net_rtt
+        return t
+
+    def book_tier(self, arrival: Optional[float], cold_put_bytes: int = 0,
+                  cold_get_bytes: int = 0, n_objects: int = 1) -> float:
+        """Book tier moves (§14): demotions PUT into the cold class at the
+        archive rates; rehydrations GET out of it."""
+        if self.sim is None or arrival is None:
+            return 0.0
+        s = self.service
+        t = self.cpu.submit(arrival, s.broker_cpu_per_req * max(1, n_objects))
+        if self.store_resource is not None:
+            if cold_put_bytes:
+                t = self.store_resource.submit(
+                    t, n_objects * s.cold_put_base + s.cold_put_per_kb * cold_put_bytes / 1024)
+            if cold_get_bytes:
+                t = self.store_resource.submit(
+                    t, n_objects * s.cold_get_base + s.cold_get_per_kb * cold_get_bytes / 1024)
+        t += s.metadata_op + s.net_rtt
+        return t
+
 
 class KafkaLikeBroker(Broker):
     """Stateful shared-broker baseline (§6.2): all workloads hit the same broker
@@ -374,7 +450,8 @@ class KafkaLikeBroker(Broker):
     def _book(self, arrival: Optional[float], write_bytes: int = 0,
               read_bytes: int = 0, fetch_bytes: Optional[int] = None,
               get_ops: Optional[int] = None,
-              meta_cached: bool = False) -> float:
+              meta_cached: bool = False,
+              cold_get_ops: int = 0, cold_fetch_bytes: int = 0) -> float:
         # Every read is served from this broker's local disk: the page cache's
         # fetch accounting (fetch_bytes/get_ops) must NOT exempt the baseline
         # — a free RAM cache here would understate the very read contention

@@ -175,6 +175,17 @@ class RunIndex:
             out[r.object_id] = out.get(r.object_id, 0) + 1
         return out
 
+    def object_refbytes(self) -> dict:
+        """Per-object referenced-byte multiset: object id -> total bytes this
+        index's runs reference in it (overlaps counted once per run, shared
+        runs once per attached index — same multiset semantics as
+        ``object_refcounts``). This is what the compaction manifests
+        (DESIGN.md §14) aggregate into per-object live-byte ratios."""
+        out: dict = {}
+        for r in self._runs:
+            out[r.object_id] = out.get(r.object_id, 0) + int(r.lengths.sum())
+        return out
+
     def snapshot(self) -> "RunIndex":
         """O(runs) snapshot sharing the (immutable) Run objects — used when a
         promote must preserve the old index for severed/frozen dependents."""
@@ -222,6 +233,14 @@ class NaiveIndex:
         out: dict = {}
         for obj, _off, _ln in self.entries.values():
             out[obj] = out.get(obj, 0) + 1
+        return out
+
+    def object_refbytes(self) -> dict:
+        """Per-object referenced-byte multiset (one contribution per entry,
+        copies included) — see :meth:`RunIndex.object_refbytes`."""
+        out: dict = {}
+        for obj, _off, ln in self.entries.values():
+            out[obj] = out.get(obj, 0) + ln
         return out
 
     def nbytes(self) -> int:

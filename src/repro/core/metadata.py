@@ -43,6 +43,39 @@ from .index import NaiveIndex, RunIndex, Span
 from .ltt import EagerTailMap, LazyTailTree
 
 
+def _merge_byte_spans(spans: List[Tuple[int, int]]) -> List[Tuple[int, int]]:
+    """Union of (offset, length) byte spans: sorted, overlapping/adjacent
+    spans merged. Zero-length spans (empty records) survive as degenerate
+    points unless covered, so the compaction mapping can still translate
+    their offsets."""
+    if not spans:
+        return []
+    spans = sorted(spans)
+    out: List[List[int]] = [list(spans[0])]
+    for off, ln in spans[1:]:
+        last = out[-1]
+        if off <= last[0] + last[1]:
+            last[1] = max(last[1], off + ln - last[0])
+        else:
+            out.append([off, ln])
+    return [(o, ln) for o, ln in out]
+
+
+def _translate_offset(ranges: Tuple, starts: List[int],
+                      off: int, ln: int) -> Optional[int]:
+    """Map one source byte span into compacted-object coordinates via the
+    ``compact`` command's ``(src_off, length, dst_off)`` ranges (sorted by
+    ``src_off``; ``starts`` is the precomputed sort key list). Returns None
+    if the span is not fully inside one mapped range — the staleness signal."""
+    j = bisect.bisect_right(starts, off) - 1
+    if j < 0:
+        return None
+    s, length, d = ranges[j]
+    if off + ln > s + length:
+        return None
+    return d + (off - s)
+
+
 @dataclass
 class LogMeta:
     log_id: int
@@ -189,6 +222,27 @@ class MetadataState:
         self.reclaimed: Set[str] = set()
         self.gc_epoch = 0            # gc commands applied
         self.reclaimed_total = 0     # objects ever reclaimed
+        # -- compaction + tiering manifests (DESIGN.md §14) ----------------
+        # `object_bytes[obj]` is the object's total payload size, learned at
+        # append time (every append command carries the byte ranges covering
+        # the whole PUT payload, single-log or group-commit) and set exactly
+        # by the `compact` command for objects it writes. `object_ref_bytes`
+        # is the byte-granular twin of `object_refs`: the multiset sum of
+        # referenced bytes over every attached index entry. Their ratio is
+        # the per-object live-byte ratio the compactor selects on. Shared
+        # runs inflate the multiset (counted once per attached index), which
+        # only *raises* the apparent live ratio — compaction gets less eager,
+        # never unsafe. `cold_objects` is the replicated record of which
+        # objects the `demote_cold` command moved to the cold store class;
+        # `object_birth` (op-seq at first sight) drives age-based demotion.
+        # All of these replicate + snapshot exactly like the §13 manifests.
+        self.object_bytes: Dict[str, int] = {}
+        self.object_ref_bytes: Dict[str, int] = {}
+        self.cold_objects: Set[str] = set()
+        self.object_birth: Dict[str, int] = {}
+        self.op_seq = 0              # SMR commands applied (age clock)
+        self.compact_epoch = 0       # compact commands applied (incl. stale)
+        self.compacted_total = 0     # source objects retired by compaction
 
     def __getstate__(self) -> dict:
         # Raft snapshots pickle the whole state machine; the view cache and
@@ -241,30 +295,40 @@ class MetadataState:
         enqueues, keeping the queue proportional to *dead* objects."""
         if object_id not in self.object_refs and object_id not in self.reclaimed:
             self.object_refs[object_id] = 0
+            self.object_birth[object_id] = self.op_seq
 
-    def _ref_add(self, object_id: str, n: int = 1) -> None:
+    def _ref_add(self, object_id: str, n: int = 1, nbytes: int = 0) -> None:
         self.object_refs[object_id] = self.object_refs.get(object_id, 0) + n
+        if nbytes:
+            self.object_ref_bytes[object_id] = \
+                self.object_ref_bytes.get(object_id, 0) + nbytes
 
-    def _ref_drop(self, object_id: str, n: int = 1) -> None:
+    def _ref_drop(self, object_id: str, n: int = 1, nbytes: int = 0) -> None:
         left = self.object_refs.get(object_id, 0) - n
         assert left >= 0, f"negative refcount for {object_id}"
         self.object_refs[object_id] = left
+        if nbytes:
+            left_b = self.object_ref_bytes.get(object_id, 0) - nbytes
+            assert left_b >= 0, f"negative ref-bytes for {object_id}"
+            self.object_ref_bytes[object_id] = left_b
         if left == 0:
             self._reclaimable.append(object_id)
 
     def _attach_index(self, index) -> None:
         """A whole index became (another) live reference holder — a frozen
         pre-promote snapshot, or a parent adopting the child's index."""
+        refbytes = index.object_refbytes()
         for obj, n in index.object_refcounts().items():
-            self._ref_add(obj, n)
+            self._ref_add(obj, n, refbytes.get(obj, 0))
 
     def _detach_index(self, index) -> None:
         """A log left `self.logs` (or had its index replaced): every entry of
         its index releases one reference. Runs may still be *shared* with a
         surviving index object — counting is per attached index, so the
         survivor's contribution keeps the objects alive."""
+        refbytes = index.object_refbytes()
         for obj, n in index.object_refcounts().items():
-            self._ref_drop(obj, n)
+            self._ref_drop(obj, n, refbytes.get(obj, 0))
 
     def _apply_gc(self, limit: Optional[int] = None,
                   pinned: Tuple[str, ...] = ()) -> List[str]:
@@ -292,6 +356,10 @@ class MetadataState:
                 requeue.append(obj)
                 continue
             del self.object_refs[obj]
+            self.object_ref_bytes.pop(obj, None)
+            self.object_bytes.pop(obj, None)
+            self.object_birth.pop(obj, None)
+            self.cold_objects.discard(obj)
             self.reclaimed.add(obj)
             out.append(obj)
         self._reclaimable.extend(requeue)
@@ -311,6 +379,193 @@ class MetadataState:
     def gc_tracked(self) -> int:
         """Objects with at least one live index reference."""
         return sum(1 for v in self.object_refs.values() if v > 0)
+
+    # -- compaction + tiering (DESIGN.md §14) -------------------------------
+    def _apply_compact(self, new_object_id: str, new_size: int,
+                       mapping: Tuple) -> Tuple:
+        """The compaction linearization point: atomically swap every index
+        entry (every log, frozen stand-ins included) referencing the mapped
+        source objects onto ``new_object_id``, a compacted object the broker
+        already PUT. ``mapping`` is ``((source_id, ranges), ...)`` with
+        ``ranges = ((src_off, length, dst_off), ...)`` sorted by ``src_off``
+        — explicit command arguments, so the swap is deterministic on every
+        replica and under snapshot replay.
+
+        Validation runs to completion BEFORE any mutation: if any live entry
+        falls outside its source's mapped ranges (the liveness set moved
+        between the broker's read and this command — e.g. a replay
+        re-attached a span the compactor thought dead), the command mutates
+        nothing and returns ``("stale", reason)``; the already-durable
+        compacted object is enqueued as a zero-ref orphan for the §13 path.
+
+        On success the swap rewrites each unique shared ``Run`` in place
+        (object id + translated offsets), so frozen snapshots and memoized
+        flattened views — both of which hold direct Run references — stay
+        coherent with no invalidation, and the sources' refcounts drop to
+        zero, queueing them for the reaper. Readers observe byte-identical
+        content: the compacted object carries the exact live spans.
+        """
+        self._register_object(new_object_id)
+        if new_size > self.object_bytes.get(new_object_id, 0):
+            self.object_bytes[new_object_id] = new_size
+
+        def stale(reason: str) -> Tuple:
+            # mirror _apply_append's orphan path: the PUT is durable, the
+            # swap is not happening — reclaim via the zero-ref candidate path
+            if (self.object_refs.get(new_object_id, 0) == 0
+                    and new_object_id not in self.reclaimed):
+                self._reclaimable.append(new_object_id)
+            self.compact_epoch += 1
+            return ("stale", reason)
+
+        if new_object_id in self.reclaimed:
+            return stale(f"compacted object {new_object_id} was already reclaimed")
+        if self.object_refs.get(new_object_id, 0) > 0:
+            return stale(f"compacted object {new_object_id} is already referenced")
+        sources: Dict[str, Tuple] = {}
+        for src, ranges in mapping:
+            if src == new_object_id or src in self.reclaimed:
+                return stale(f"source {src} is not compactable")
+            sources[src] = (ranges, [r[0] for r in ranges])
+        # ---- validate + plan (no mutation yet) ----------------------------
+        seen_runs: Dict[int, Tuple] = {}   # id(run) -> (run, new_offsets)
+        run_refs: List[Tuple[str, int]] = []      # per (index, run) attachment
+        naive_moves: List[Tuple] = []             # (index, pos, src, new_off, ln)
+        for lid in sorted(self.logs):
+            index = self.logs[lid].index
+            if isinstance(index, NaiveIndex):
+                for pos in sorted(index.entries):
+                    obj, off, ln = index.entries[pos]
+                    if obj not in sources:
+                        continue
+                    ranges, starts = sources[obj]
+                    new_off = _translate_offset(ranges, starts, off, ln)
+                    if new_off is None:
+                        return stale(f"entry {lid}:{pos} of {obj} is outside the live map")
+                    naive_moves.append((index, pos, obj, new_off, ln))
+            else:
+                for run in index.runs():
+                    obj = run.object_id
+                    if obj not in sources:
+                        continue
+                    if id(run) not in seen_runs:
+                        ranges, starts = sources[obj]
+                        new_offs = np.empty_like(run.offsets)
+                        for i, (off, ln) in enumerate(zip(run.offsets.tolist(),
+                                                          run.lengths.tolist())):
+                            new_off = _translate_offset(ranges, starts, off, ln)
+                            if new_off is None:
+                                return stale(f"run at {lid}:{run.start} of {obj} "
+                                             "is outside the live map")
+                            new_offs[i] = new_off
+                        seen_runs[id(run)] = (run, new_offs)
+                    run_refs.append((obj, int(run.lengths.sum())))
+        if not run_refs and not naive_moves:
+            return stale("no live index entries reference the sources")
+        # ---- swap (all-or-nothing from here: no failures possible) --------
+        for obj, nbytes in run_refs:
+            self._ref_drop(obj, 1, nbytes)
+            self._ref_add(new_object_id, 1, nbytes)
+        for index, pos, obj, new_off, ln in naive_moves:
+            index.entries[pos] = (new_object_id, new_off, ln)
+            self._ref_drop(obj, 1, ln)
+            self._ref_add(new_object_id, 1, ln)
+        for run, new_offs in seen_runs.values():
+            run.object_id = new_object_id
+            run.offsets = new_offs
+        retired = sorted({obj for obj, _ in run_refs}
+                         | {mv[2] for mv in naive_moves})
+        self.compact_epoch += 1
+        self.compacted_total += len(retired)
+        return ("ok", {"object": new_object_id, "sources": tuple(retired),
+                       "entries": len(run_refs) + len(naive_moves),
+                       "live_bytes": self.object_ref_bytes.get(new_object_id, 0)})
+
+    def _apply_demote_cold(self, object_ids: Tuple[str, ...]) -> List[str]:
+        """Consensus-ordered demotion to the cold store class (§14): record
+        which objects belong cold. Objects that died, were reclaimed, or are
+        already cold are skipped deterministically; the accepted ids are
+        returned so the broker-side tier manager moves exactly those."""
+        done: List[str] = []
+        for obj in object_ids:
+            if (obj in self.reclaimed or obj in self.cold_objects
+                    or self.object_refs.get(obj, 0) <= 0):
+                continue
+            self.cold_objects.add(obj)
+            done.append(obj)
+        return done
+
+    def _apply_promote_hot(self, object_ids: Tuple[str, ...]) -> List[str]:
+        """Promotion back to the hot tier (scan-triggered rehydration)."""
+        done: List[str] = []
+        for obj in object_ids:
+            if obj in self.cold_objects:
+                self.cold_objects.discard(obj)
+                done.append(obj)
+        return done
+
+    def live_byte_ratio(self, object_id: str) -> float:
+        """Referenced bytes / total bytes for one object (multiset-inflated
+        ratios clamp at 1.0 — shared runs only make objects look MORE live)."""
+        total = self.object_bytes.get(object_id, 0)
+        if total <= 0:
+            return 1.0
+        return min(1.0, self.object_ref_bytes.get(object_id, 0) / total)
+
+    def compaction_candidates(self, max_live_ratio: float, min_bytes: int = 1,
+                              exclude: Iterable[str] = ()) -> List[str]:
+        """Referenced objects whose live-byte ratio is at or below the
+        threshold — the compactor's selection input. ``exclude`` carries the
+        broker-side pin/session exclusions (same role as ``gc`` pins)."""
+        skip = set(exclude)
+        out: List[str] = []
+        for obj, n in self.object_refs.items():
+            if n <= 0 or obj in skip:
+                continue
+            total = self.object_bytes.get(obj, 0)
+            if total < min_bytes:
+                continue
+            live = self.object_ref_bytes.get(obj, 0)
+            if live < total and live / total <= max_live_ratio:
+                out.append(obj)
+        return out
+
+    def demotion_candidates(self, min_age: int,
+                            prefixes: Tuple[str, ...] = ("cmp-",),
+                            exclude: Iterable[str] = ()) -> List[str]:
+        """Referenced hot objects old enough (in SMR command ticks since
+        first sight) to demote to the cold class."""
+        skip = set(exclude)
+        pfx = tuple(prefixes)
+        out: List[str] = []
+        for obj, n in self.object_refs.items():
+            if n <= 0 or obj in self.cold_objects or obj in skip:
+                continue
+            if pfx and not obj.startswith(pfx):
+                continue
+            if self.op_seq - self.object_birth.get(obj, self.op_seq) >= min_age:
+                out.append(obj)
+        return out
+
+    def object_live_spans(self, object_ids: Iterable[str]
+                          ) -> Dict[str, List[Tuple[int, int]]]:
+        """Exact per-object union of referenced byte spans over every log's
+        index (frozen stand-ins included), merged and sorted — what the
+        compactor ranged-reads and what the mapping ranges are built from."""
+        want = set(object_ids)
+        raw: Dict[str, List[Tuple[int, int]]] = {obj: [] for obj in want}
+        for lid in sorted(self.logs):
+            index = self.logs[lid].index
+            if isinstance(index, NaiveIndex):
+                for obj, off, ln in index.entries.values():
+                    if obj in want:
+                        raw[obj].append((off, ln))
+            else:
+                for run in index.runs():
+                    if run.object_id in want:
+                        raw[run.object_id].extend(
+                            zip(run.offsets.tolist(), run.lengths.tolist()))
+        return {obj: _merge_byte_spans(sp) for obj, sp in raw.items()}
 
     # -- invalidation (DESIGN.md §11) ---------------------------------------
     def _drop_view(self, owner: int) -> None:
@@ -354,6 +609,9 @@ class MetadataState:
     # --------------------------------------------------------------- commands
     def apply(self, cmd: Tuple) -> object:
         op = cmd[0]
+        # the age clock ticks on every command (success or deterministic
+        # failure — both apply identically on every replica)
+        self.op_seq += 1
         return getattr(self, "_apply_" + op)(*cmd[1:])
 
     def _apply_create_root(self, name: str) -> int:
@@ -370,6 +628,13 @@ class MetadataState:
         # the object, so a blocked/unknown-log append leaves an orphan in
         # shared storage that only the zero-ref candidate path can reclaim
         self._register_object(object_id)
+        # learn the object's size (§14): every append command covers a suffix
+        # of the PUT payload, so the max byte-end over all appends naming the
+        # object — group-commit batches issue one per packed log — is exact
+        if lengths:
+            end = max(o + ln for o, ln in zip(offsets, lengths))
+            if end > self.object_bytes.get(object_id, 0):
+                self.object_bytes[object_id] = end
         try:
             if object_id in self.reclaimed:
                 raise InvalidOperation(
@@ -388,15 +653,16 @@ class MetadataState:
             raise
         tail, _blk = self.tails.get(log_id)
         k = len(offsets)
+        run_bytes = int(sum(lengths))
         if self._use_naive_index:
             for i in range(k):
                 meta.index.add_local(tail + i, (object_id, offsets[i], lengths[i]))
-            self._ref_add(object_id, k)
+            self._ref_add(object_id, k, run_bytes)
         else:
             meta.index.append_run(tail, object_id,
                                   np.asarray(offsets, dtype=np.int64),
                                   np.asarray(lengths, dtype=np.int64))
-            self._ref_add(object_id)
+            self._ref_add(object_id, 1, run_bytes)
         if self.cf_mode == "naive":
             # BoltNaiveCF: duplicate the new entries into EVERY descendant's
             # index at that descendant's own tail (Fig. 4a), eagerly.
@@ -407,7 +673,7 @@ class MetadataState:
                 d_index = self.logs[d].index
                 for i in range(k):
                     d_index.add_copy(d_tail + i, (object_id, offsets[i], lengths[i]))
-                self._ref_add(object_id, k)
+                self._ref_add(object_id, k, run_bytes)
         self.tails.range_add(log_id, d_tail=k)
         if self._holds(meta):
             return None  # §4.1: positions beyond a promotable fork point are withheld
@@ -453,7 +719,7 @@ class MetadataState:
         for pos in range(upto):
             span = self._lookup_one(log_id, pos)
             child_index.add_copy(pos, span)
-            self._ref_add(span[0])   # the copy is a live reference (§13)
+            self._ref_add(span[0], 1, span[2])  # the copy is a live reference (§13)
 
     def _apply_cfork(self, parent_id: int, promotable: bool) -> int:
         parent = self._get(parent_id)

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import os
 import threading
+import zlib
 from collections import OrderedDict
 from typing import Dict, Iterable, List, Optional, Tuple
 
@@ -92,6 +93,156 @@ class MemoryObjectStore(ObjectStore):
     def total_bytes(self) -> int:
         with self._lock:
             return sum(len(v) for v in self._objects.values())
+
+
+class TieredObjectStore(ObjectStore):
+    """Two store classes behind one keyspace (DESIGN.md §14): a **hot** tier
+    (raw bytes, S3-standard-like) and a **cold** tier (zlib-compressed,
+    archive-like — the DES model charges it distinct, slower service times).
+
+    Routing is by *presence*, hot tier first: whichever tier physically holds
+    the key serves it, so reads stay byte-correct at every point of a
+    demotion/rehydration crash window — the consensus ``cold_objects`` set is
+    the durable record of where objects *belong*, and ``TierManager.resync``
+    converges physical placement to it. Tier moves are split into copy and
+    drop halves (``copy_to_cold``/``drop_hot``, ``rehydrate``/``drop_cold``)
+    so the tier manager can order them around the consensus proposal and a
+    crash between halves leaves at worst a double-resident key, never a
+    missing one.
+
+    The hot-tier counters mirror :class:`MemoryObjectStore` (``OpTally``
+    captures them by name); cold traffic additionally bumps the ``cold_*``
+    counters so the DES model and benchmarks can split hot vs cold bytes.
+    """
+
+    def __init__(self, compression_level: int = 1) -> None:
+        self._hot: Dict[str, bytes] = {}
+        self._cold: Dict[str, bytes] = {}        # compressed payloads
+        self._cold_sizes: Dict[str, int] = {}    # logical (uncompressed) sizes
+        self._lock = threading.Lock()
+        self.compression_level = compression_level
+        self.put_count = 0
+        self.get_count = 0
+        self.delete_count = 0
+        self.bytes_written = 0
+        self.bytes_read = 0
+        self.bytes_deleted = 0
+        self.cold_puts = 0           # demotion writes into the cold class
+        self.cold_gets = 0           # GETs served by the cold class
+        self.cold_bytes_read = 0     # logical bytes those GETs returned
+        self.cold_bytes_written = 0  # compressed bytes demotions stored
+
+    # -- S3-ish interface ---------------------------------------------------
+    def put(self, key: str, data: bytes) -> None:
+        with self._lock:
+            self._hot[key] = bytes(data)
+            self.put_count += 1
+            self.bytes_written += len(data)
+
+    def get(self, key: str, offset: int = 0, length: Optional[int] = None) -> bytes:
+        with self._lock:
+            obj = self._hot.get(key)
+            cold = obj is None
+            if cold:
+                obj = zlib.decompress(self._cold[key])
+            self.get_count += 1
+            end = len(obj) if length is None else offset + length
+            out = obj[offset:end]
+            self.bytes_read += len(out)
+            if cold:
+                self.cold_gets += 1
+                self.cold_bytes_read += len(out)
+            return out
+
+    def delete(self, key: str) -> None:
+        with self._lock:
+            freed = 0
+            obj = self._hot.pop(key, None)
+            if obj is not None:
+                freed += len(obj)
+            if self._cold.pop(key, None) is not None:
+                freed += self._cold_sizes.pop(key, 0)
+            if freed or obj is not None:
+                self.delete_count += 1
+                self.bytes_deleted += freed
+
+    def exists(self, key: str) -> bool:
+        with self._lock:
+            return key in self._hot or key in self._cold
+
+    def size(self, key: str) -> Optional[int]:
+        """Logical size regardless of tier (reclaim accounting stays
+        tier-agnostic)."""
+        with self._lock:
+            obj = self._hot.get(key)
+            if obj is not None:
+                return len(obj)
+            return self._cold_sizes.get(key)
+
+    def list(self, prefix: str = "") -> List[str]:
+        with self._lock:
+            return sorted(k for k in set(self._hot) | set(self._cold)
+                          if k.startswith(prefix))
+
+    # -- tier moves (driven by TierManager, DESIGN.md §14) ------------------
+    def is_cold(self, key: str) -> bool:
+        """Physically cold: no hot copy, a cold copy exists."""
+        with self._lock:
+            return key not in self._hot and key in self._cold
+
+    def copy_to_cold(self, key: str) -> int:
+        """Compress the hot copy into the cold class (hot copy kept — the
+        drop happens after the demotion commits). Returns compressed size."""
+        with self._lock:
+            data = self._hot.get(key)
+            if data is None:
+                return len(self._cold.get(key, b""))
+            packed = zlib.compress(data, self.compression_level)
+            self._cold[key] = packed
+            self._cold_sizes[key] = len(data)
+            self.cold_puts += 1
+            self.cold_bytes_written += len(packed)
+            return len(packed)
+
+    def drop_hot(self, key: str) -> None:
+        with self._lock:
+            assert key in self._cold, f"dropping sole copy of {key}"
+            self._hot.pop(key, None)
+
+    def rehydrate(self, key: str) -> int:
+        """Decompress the cold copy back into the hot class (cold copy kept
+        until the promotion commits). Returns the logical size."""
+        with self._lock:
+            if key in self._hot:
+                return len(self._hot[key])
+            data = zlib.decompress(self._cold[key])
+            self._hot[key] = data
+            return len(data)
+
+    def drop_cold(self, key: str) -> None:
+        with self._lock:
+            if key in self._hot or key not in self._cold:
+                self._cold.pop(key, None)
+                self._cold_sizes.pop(key, None)
+
+    # -- accounting ---------------------------------------------------------
+    @property
+    def total_bytes(self) -> int:
+        """Physical footprint: hot logical bytes + cold *compressed* bytes
+        (double-resident keys during a move window count both)."""
+        with self._lock:
+            return (sum(len(v) for v in self._hot.values())
+                    + sum(len(v) for v in self._cold.values()))
+
+    @property
+    def cold_stored_bytes(self) -> int:
+        with self._lock:
+            return sum(len(v) for v in self._cold.values())
+
+    @property
+    def cold_logical_bytes(self) -> int:
+        with self._lock:
+            return sum(self._cold_sizes.get(k, 0) for k in self._cold)
 
 
 class FileObjectStore(ObjectStore):

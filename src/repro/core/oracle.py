@@ -232,10 +232,11 @@ class OracleModel:
 # Byte-liveness oracle for segment GC (DESIGN.md §13)
 # ---------------------------------------------------------------------------
 
-#: Object-id prefixes the brokers use for data-plane PUTs — per-append objects
-#: and group-commit segments. The liveness predicate only judges these:
-#: a store shared with e.g. the checkpoint substrate holds other keys.
-DATA_OBJECT_PREFIXES = ("obj-", "seg-")
+#: Object-id prefixes the brokers use for data-plane PUTs — per-append objects,
+#: group-commit segments, and compacted objects (§14). The liveness predicate
+#: only judges these: a store shared with e.g. the checkpoint substrate holds
+#: other keys.
+DATA_OBJECT_PREFIXES = ("obj-", "seg-", "cmp-")
 
 
 def recount_object_refs(state) -> Dict[str, int]:
@@ -250,15 +251,38 @@ def recount_object_refs(state) -> Dict[str, int]:
     return refs
 
 
+def recount_object_ref_bytes(state) -> Dict[str, int]:
+    """Brute-force §14 twin of :func:`recount_object_refs`: per object, the
+    MULTISET sum of referenced byte lengths across every log's index entries
+    (a byte referenced by two logs counts twice — matching the incremental
+    ``object_ref_bytes`` accounting exactly)."""
+    refs: Dict[str, int] = {}
+    for meta in state.logs.values():
+        for obj, n in meta.index.object_refbytes().items():
+            refs[obj] = refs.get(obj, 0) + n
+    return refs
+
+
 def check_manifest_audit(state) -> None:
     """Incremental accounting == from-scratch recount (positive counts; the
-    zero entries are candidates awaiting a `gc` command)."""
+    zero entries are candidates awaiting a `gc` command). Covers both the
+    §13 entry-count manifests and the §14 byte-granular manifests."""
     want = recount_object_refs(state)
     got = {k: v for k, v in state.object_refs.items() if v > 0}
     assert got == want, (
         f"manifest drift: incremental {got} != recount {want}")
     dead = set(want) & state.reclaimed
     assert not dead, f"reclaimed objects still referenced: {dead}"
+    want_b = recount_object_ref_bytes(state)
+    got_b = {k: v for k, v in state.object_ref_bytes.items() if v > 0}
+    assert got_b == want_b, (
+        f"byte-manifest drift: incremental {got_b} != recount {want_b}")
+    unsized = set(want_b) - set(state.object_bytes)
+    assert not unsized, (
+        f"referenced objects with no learned size (§14): {sorted(unsized)}")
+    cold_dead = state.cold_objects - set(state.object_refs)
+    assert not cold_dead, (
+        f"cold-placement records for unknown objects: {sorted(cold_dead)}")
 
 
 def check_storage_safety(system) -> None:
@@ -286,10 +310,59 @@ def check_storage_safety(system) -> None:
                 f"log {lid} span ({obj},{off},{ln}) truncated to {len(blob)}")
 
 
-def check_storage_liveness(system) -> None:
+def _index_spans(index):
+    """Every (object, offset, length) byte span an index references —
+    introspected from scratch (RunIndex runs or NaiveIndex entries), not via
+    the manifests under audit."""
+    runs = getattr(index, "_runs", None)
+    if runs is not None:
+        for r in runs:
+            for i in range(r.n):
+                yield r.object_id, int(r.offsets[i]), int(r.lengths[i])
+        return
+    for obj, off, ln in getattr(index, "entries", {}).values():
+        yield obj, off, ln
+
+
+def live_byte_union(state) -> Dict[str, int]:
+    """Per object: the size of the UNION of all referenced byte spans across
+    every log (frozen stand-ins included). Unlike the multiset
+    ``object_ref_bytes``, a byte shared by N logs counts once — this is the
+    floor of what storage must physically hold, so it is the denominator of
+    the §14 amplification bound."""
+    spans_by_obj: Dict[str, List[Tuple[int, int]]] = {}
+    for meta in state.logs.values():
+        for obj, off, ln in _index_spans(meta.index):
+            if ln > 0:
+                spans_by_obj.setdefault(obj, []).append((off, off + ln))
+    out: Dict[str, int] = {}
+    for obj, spans in spans_by_obj.items():
+        spans.sort()
+        total = 0
+        cur_lo, cur_hi = spans[0]
+        for lo, hi in spans[1:]:
+            if lo <= cur_hi:
+                cur_hi = max(cur_hi, hi)
+            else:
+                total += cur_hi - cur_lo
+                cur_lo, cur_hi = lo, hi
+        total += cur_hi - cur_lo
+        out[obj] = total
+    return out
+
+
+def check_storage_liveness(system,
+                           max_byte_amplification: Optional[float] = None) -> None:
     """*Liveness* (call after GC drains with no pins): reclaimed == dead —
     the store holds exactly the data objects some log still references, and
-    nothing with zero references survived the drain."""
+    nothing with zero references survived the drain.
+
+    With ``max_byte_amplification`` set, additionally asserts the §14 bound
+    at BYTE granularity: total logical data bytes resident in the store may
+    exceed the live-byte union (dead bytes inside partially-live shared
+    segments) by at most that factor. The §13 object-level predicate alone
+    cannot see this leak — a group-commit segment with one live record is
+    fully "live" to it."""
     state = system.metadata.state
     pending = state.gc_pending()
     assert pending == 0, f"{pending} dead objects not reclaimed after drain"
@@ -300,3 +373,18 @@ def check_storage_liveness(system) -> None:
     assert not leaked, f"unreferenced objects survived GC: {sorted(leaked)}"
     lost = live - in_store
     assert not lost, f"referenced objects missing from store: {sorted(lost)}"
+    if max_byte_amplification is None:
+        return
+    union = live_byte_union(state)
+    live_bytes = sum(n for obj, n in union.items()
+                     if obj.startswith(DATA_OBJECT_PREFIXES))
+    stored_bytes = sum(system.store.size(k) or 0 for k in in_store)
+    if live_bytes == 0:
+        assert stored_bytes == 0, (
+            f"no live bytes but {stored_bytes} data bytes resident")
+        return
+    amplification = stored_bytes / live_bytes
+    assert amplification <= max_byte_amplification, (
+        f"storage amplification {amplification:.3f}x exceeds the "
+        f"{max_byte_amplification:.3f}x bound: {stored_bytes} resident data "
+        f"bytes over {live_bytes} live (union) bytes")

@@ -239,7 +239,16 @@ class MetadataService:
             gc_items = (sorted(state.object_refs.items()),
                         tuple(state._reclaimable),
                         sorted(state.reclaimed))
-            return pickle.dumps((items, gc_items))
+            # compaction + tiering manifests (§14): byte-granular refcounts,
+            # learned object sizes, birth ticks (they decide future demotion
+            # eligibility), and the replicated cold-placement set must match
+            # too, or a failover would compact/demote different objects
+            compact_items = (sorted(state.object_ref_bytes.items()),
+                             sorted(state.object_bytes.items()),
+                             sorted(state.object_birth.items()),
+                             sorted(state.cold_objects),
+                             state.op_seq, state.compact_epoch)
+            return pickle.dumps((items, gc_items, compact_items))
 
         blobs = set()
         for r in self.replicas:

@@ -127,6 +127,10 @@ class OpTally:
     spec_conflicts: int = 0   # speculative commit conflicts (§12)
     spec_rebases: int = 0     # auto-rebases (§12)
     spec_replayed: int = 0    # suffix records re-sequenced by rebases (§12)
+    cold_gets: int = 0        # GETs served by the cold store class (§14)
+    bytes_get_cold: int = 0   # logical bytes those cold GETs returned (§14)
+    cold_demotions: int = 0   # hot->cold tier moves (§14)
+    bytes_demoted: int = 0    # compressed bytes demotions stored cold (§14)
 
     @classmethod
     def capture(cls, system, records: int = 0) -> "OpTally":
@@ -148,7 +152,11 @@ class OpTally:
                                for b in getattr(system, "brokers", [])),
                    spec_conflicts=spec.conflicts,
                    spec_rebases=spec.rebases,
-                   spec_replayed=spec.replayed_records)
+                   spec_replayed=spec.replayed_records,
+                   cold_gets=getattr(system.store, "cold_gets", 0),
+                   bytes_get_cold=getattr(system.store, "cold_bytes_read", 0),
+                   cold_demotions=getattr(system.store, "cold_puts", 0),
+                   bytes_demoted=getattr(system.store, "cold_bytes_written", 0))
 
     def delta(self, since: "OpTally") -> "OpTally":
         return OpTally(records=self.records - since.records,
@@ -164,7 +172,11 @@ class OpTally:
                        replays=self.replays - since.replays,
                        spec_conflicts=self.spec_conflicts - since.spec_conflicts,
                        spec_rebases=self.spec_rebases - since.spec_rebases,
-                       spec_replayed=self.spec_replayed - since.spec_replayed)
+                       spec_replayed=self.spec_replayed - since.spec_replayed,
+                       cold_gets=self.cold_gets - since.cold_gets,
+                       bytes_get_cold=self.bytes_get_cold - since.bytes_get_cold,
+                       cold_demotions=self.cold_demotions - since.cold_demotions,
+                       bytes_demoted=self.bytes_demoted - since.bytes_demoted)
 
     @property
     def proposals_per_record(self) -> float:
@@ -196,6 +208,10 @@ class ServiceTimes:
     metadata_op_cached: float = 4e-6       # lookup served by a flattened view
                                            # (§11: bisect + slice, no chain walk)
     net_rtt: float = 60e-6
+    cold_get_base: float = 5e-3            # archive-class ranged GET (§14):
+    cold_get_per_kb: float = 8e-6          # slower first byte + decompression
+    cold_put_base: float = 3e-3            # demotion PUT into the cold class
+    cold_put_per_kb: float = 4e-6
 
 
 def percentile(sorted_vals: List[float], p: float) -> float:

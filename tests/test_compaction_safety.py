@@ -1,0 +1,696 @@
+"""Compaction-epoch equivalence harness + cold-tiering safety (DESIGN.md §14).
+
+The §13 harness proves GC never deletes a reachable byte; this file proves the
+stronger §14 contract: a *compaction epoch* — candidate selection, live-span
+ranged reads, the compacted-object PUT, the consensus ``compact`` swap, the
+source reap, and any tier demotion/promotion around it — is **byte-invisible**
+to every reader. Concretely:
+
+* **Epoch equivalence** — under arbitrary fork/append/promote/squash/
+  speculate/gc/compact interleavings (group-commit multi-log segments and
+  mid-scan readers included), every live log reads byte-identically across
+  every epoch boundary, and the byte-granular manifests always equal a
+  from-scratch recount.
+* **Byte liveness** — after churn quiesces, GC drains, and compaction drains,
+  resident data bytes exceed the live-byte union by at most the configured
+  residual (1/max_live_ratio); the §13 object-level predicate cannot see this
+  leak at all (``test_oracle_byte_bound_catches_the_seed_leak``).
+* **Fault injection** — a compactor crash between the PUT and the swap
+  (orphan swept by resync), between the swap and the reap (sources reclaimed
+  by any later quantum), a stale swap (liveness moved underneath the
+  compactor), leader failover and snapshot install with compaction state in
+  flight — replicas must converge on identical byte manifests and cold sets.
+* **Tiering** — demoted objects read byte-identically through the slow store
+  class, scans promote cold ranges back, point reads do not, and the DES
+  tally splits hot from cold traffic.
+"""
+
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BoltSystem, CompactionConfig, GroupCommitConfig,
+                        TieredObjectStore, TieringConfig)
+from repro.core.errors import AgileLogError
+from repro.core.objectstore import MemoryObjectStore
+from repro.core.oracle import (check_manifest_audit, check_storage_liveness,
+                               check_storage_safety, live_byte_union,
+                               recount_object_ref_bytes)
+from repro.core.sim import OpTally
+
+from test_gc_safety import GCTraceRunner
+
+#: residual amplification ceiling once compaction drains at the default 0.85
+#: live-ratio threshold: every surviving object is individually > 85% live
+RESIDUAL_AMP = 1.0 / CompactionConfig().max_live_ratio + 1e-9
+
+
+def _data_objects(system):
+    return [k for k in system.store.list()
+            if k.startswith(("obj-", "seg-", "cmp-"))]
+
+
+def _churn_multi_log(system, root, rounds=3, losers=2):
+    """Group-commit churn that leaves shared segments partially live: each
+    round stages one surviving speculation and ``losers`` aborted ones into
+    the SAME segment, so every segment keeps a live slice after the abort."""
+    for rnd in range(rounds):
+        winner = root.speculate()
+        for i in range(8):
+            winner.append(f"w{rnd}-{i}".encode() * 16)
+        dead = [root.speculate() for _ in range(losers)]
+        for j, spec in enumerate(dead):
+            for i in range(8):
+                spec.append(f"l{rnd}-{j}-{i}".encode() * 16)
+        system.flush()
+        winner.commit()
+        for spec in dead:
+            spec.abort()
+    system.flush()
+    system.gc()
+
+
+# ---------------------------------------------------------------------------
+# the tentpole, directed: swap correctness + amplification drop
+# ---------------------------------------------------------------------------
+
+def test_compact_swap_is_byte_invisible_and_bounds_amplification():
+    system = BoltSystem(group_commit=GroupCommitConfig(max_records=10_000),
+                        gc=True)
+    root = system.create_log("r")
+    for i in range(20):
+        root.append(f"base-{i:03d}".encode() * 8)
+    _churn_multi_log(system, root)
+    state = system.metadata.state
+    live = sum(live_byte_union(state).values())
+    assert system.store.total_bytes / live > 1.2   # the leak is real pre-swap
+    before = root.read(0, root.tail)
+    stats = system.compact()
+    assert stats.compacted_objects >= 1 and stats.sources_retired >= 1
+    assert stats.bytes_written < stats.bytes_written + 1  # counters populated
+    system.gc()
+    assert root.read(0, root.tail) == before       # epoch equivalence
+    check_manifest_audit(state)
+    check_storage_safety(system)
+    check_storage_liveness(system, max_byte_amplification=1.2)
+    assert system.metadata.check_convergence()
+    # the compacted object is fully live: not a candidate for re-compaction
+    assert system.compact_stats.candidates == 0
+
+
+def test_compact_preserves_frozen_chains_and_sforks():
+    """The swap rewrites every referencing index — frozen stand-ins and
+    sfork prefix copies included — in one atomic command; a frozen snapshot
+    must keep reading identical bytes through the compacted object."""
+    system = BoltSystem(group_commit=GroupCommitConfig(max_records=10_000),
+                        gc=True)
+    root = system.create_log("r")
+    root.append(b"r0").wait()
+    keeper = root.cfork()                          # siblings co-locate (§5.7):
+    goner = root.cfork()                           # their appends share segments
+    for i in range(8):
+        keeper.append(f"k{i}".encode() * 16)
+    goner.append(b"dead-weight" * 24)
+    system.flush()                                 # ONE segment, both forks
+    snap = keeper.sfork(past=4)                    # prefix copy of the segment
+    keeper.squash()                                # freezes: snap depends on it
+    goner.squash()                                 # its slice is dead weight
+    system.gc()
+    before_root, before_snap = root.read(0, root.tail), snap.read(0, snap.tail)
+    assert system.compact().sources_retired >= 1
+    system.gc()
+    assert root.read(0, root.tail) == before_root
+    assert snap.read(0, snap.tail) == before_snap  # via the frozen stand-in
+    check_manifest_audit(system.metadata.state)
+    check_storage_liveness(system, max_byte_amplification=RESIDUAL_AMP)
+
+
+def test_compact_rewrites_naive_index_entries_too():
+    system = BoltSystem(cf_mode="naive", gc=True,
+                        group_commit=GroupCommitConfig(max_records=10_000))
+    root = system.create_log("r")
+    root.append(b"n0").wait()
+    keeper = root.cfork()                          # naive mode copies eagerly
+    goner = root.cfork()                           # co-located sibling
+    for i in range(8):
+        keeper.append(f"n{i}".encode() * 8)
+    goner.append(b"dead-weight" * 16)
+    system.flush()                                 # ONE segment, both forks
+    goner.squash()
+    system.gc()
+    before = keeper.read(0, keeper.tail)
+    assert system.compact().compacted_objects >= 1
+    system.gc()
+    assert keeper.read(0, keeper.tail) == before
+    check_manifest_audit(system.metadata.state)
+    check_storage_liveness(system, max_byte_amplification=RESIDUAL_AMP)
+
+
+def test_mid_scan_reader_survives_a_full_epoch():
+    """A scan paused mid-way re-resolves its remaining batches after the
+    sources it started on were compacted away, reaped, and the compacted
+    object demoted cold — and still yields the original bytes."""
+    system = BoltSystem(group_commit=GroupCommitConfig(max_records=10_000),
+                        gc=True, tiering=TieringConfig(min_age=1))
+    root = system.create_log("r")
+    want = [f"rec-{i:04d}".encode() * 4 for i in range(60)]
+    for rec in want:
+        root.append(rec)
+    _churn_multi_log(system, root, rounds=2, losers=2)
+    want = root.read(0, root.tail)
+    it = root.scan(batch=7)
+    got = [next(it) for _ in range(25)]            # cursor parked mid-segment
+    assert system.compact().sources_retired >= 1   # epoch under the scan
+    system.gc()
+    system.demote()
+    got.extend(it)                                 # remaining batches re-resolve
+    assert got == want
+    check_storage_safety(system)
+
+
+def test_compactor_excludes_open_session_receipt_segments():
+    """A rebase replays receipt (object, offsets) tuples verbatim, so the
+    compactor must skip segments an open speculation's receipts reference —
+    and pick them up once the session closes."""
+    system = BoltSystem(group_commit=GroupCommitConfig(max_records=10_000))
+    root = system.create_log("r")
+    root.append(b"base").wait()
+    spec = root.speculate()
+    spec.append(b"suffix-kept" * 8)
+    loser = root.cfork()
+    loser.append(b"loser-bytes" * 24)
+    system.flush()                                 # ONE shared segment
+    loser.squash()                                 # segment now partially live
+    system.gc()
+    seg = {s[0] for r in spec._suffix
+           if (s := r._pending.segment) is not None}
+    assert seg and seg <= set(system._session_segments())
+    assert not (seg & set(system.compactor.candidates()))
+    assert system.compact_quantum() == []          # nothing eligible
+    root.append(b"conflict").wait()                # force a rebase on commit
+    res = spec.commit()
+    assert res.rebases == 1
+    assert root.read(0, root.tail)[-1] == b"suffix-kept" * 8
+    system.gc()
+    # session closed: the (re-indexed) segments are fair game again
+    before = root.read(0, root.tail)
+    system.compact()
+    system.gc()
+    assert root.read(0, root.tail) == before
+    check_storage_liveness(system, max_byte_amplification=RESIDUAL_AMP)
+
+
+def test_compaction_candidates_honor_reaper_pins():
+    system = BoltSystem(group_commit=GroupCommitConfig(max_records=10_000))
+    root = system.create_log("r")
+    root.append(b"base").wait()
+    keeper = root.cfork()
+    goner = root.cfork()                           # co-located siblings
+    keeper.append(b"live-bytes" * 16)
+    goner.append(b"pinned-dead-weight" * 16)
+    system.flush()                                 # shared segment
+    goner.squash()
+    system.gc()
+    cands = system.compactor.candidates()
+    assert cands
+    system.collector.pin(cands)
+    try:
+        assert not set(cands) & set(system.compactor.candidates())
+    finally:
+        system.collector.unpin(cands)
+    assert set(cands) <= set(system.compactor.candidates())
+
+
+# ---------------------------------------------------------------------------
+# oracle regression (satellite): the byte bound catches the seed leak
+# ---------------------------------------------------------------------------
+
+def test_oracle_byte_bound_catches_the_seed_leak():
+    """Pre-compaction, group-commit churn leaves the store ~2x over the
+    live-byte union while the §13 object-level liveness predicate passes —
+    the regression the live-BYTE bound exists to catch."""
+    system = BoltSystem(group_commit=GroupCommitConfig(max_records=10_000),
+                        gc=True)
+    root = system.create_log("r")
+    for i in range(20):
+        root.append(f"b{i}".encode() * 8)
+    _churn_multi_log(system, root)
+    check_storage_liveness(system)                 # object-level: blind to it
+    with pytest.raises(AssertionError, match="amplification"):
+        check_storage_liveness(system, max_byte_amplification=1.2)
+    system.compact()
+    system.gc()
+    check_storage_liveness(system, max_byte_amplification=1.2)
+
+
+def test_byte_manifest_recount_matches_incremental_accounting():
+    system = BoltSystem(group_commit=GroupCommitConfig(max_records=10_000))
+    root = system.create_log("r")
+    for i in range(12):
+        root.append(f"x{i}".encode() * (1 + i % 4))
+    fork = root.cfork()
+    fork.append(b"fork" * 8)
+    system.flush()
+    snap = root.sfork(past=5)
+    state = system.metadata.state
+    want = recount_object_ref_bytes(state)
+    got = {k: v for k, v in state.object_ref_bytes.items() if v > 0}
+    assert got == want
+    fork.squash()
+    snap.squash()
+    system.gc()
+    check_manifest_audit(state)
+
+
+# ---------------------------------------------------------------------------
+# fault injection
+# ---------------------------------------------------------------------------
+
+def test_crash_after_put_before_swap_orphan_swept_by_resync():
+    system = BoltSystem(group_commit=GroupCommitConfig(max_records=10_000))
+    root = system.create_log("r")
+    root.append(b"base").wait()
+    _churn_multi_log(system, root, rounds=2)
+    plan = system.compactor._plan()
+    assert plan is not None
+    new_object_id, payload, _mapping, _n_gets = plan
+    system.store.put(new_object_id, payload)       # ...and the compactor dies
+    state = system.metadata.state
+    assert new_object_id not in state.object_refs  # consensus never saw it
+    swept = system.compactor.resync()
+    assert swept == [new_object_id]
+    assert not system.store.exists(new_object_id)
+    before = root.read(0, root.tail)
+    system.compact()                               # restarted compactor works
+    system.gc()
+    assert root.read(0, root.tail) == before
+    check_storage_liveness(system, max_byte_amplification=RESIDUAL_AMP)
+    assert system.compact_stats.orphans_swept == 1
+
+
+def test_crash_after_swap_before_reap_sources_reclaimed_on_next_quantum():
+    system = BoltSystem(group_commit=GroupCommitConfig(max_records=10_000),
+                        compaction=CompactionConfig(reap=False))
+    root = system.create_log("r")
+    root.append(b"base").wait()
+    _churn_multi_log(system, root, rounds=2)
+    before = root.read(0, root.tail)
+    retired = system.compact_quantum()             # swap commits; reap=False
+    assert retired                                 # ...and the compactor dies
+    assert all(system.store.exists(o) for o in retired)   # not yet reaped
+    assert root.read(0, root.tail) == before       # reads already on cmp-*
+    check_storage_safety(system)
+    system.gc()                                    # ANY later quantum finishes
+    assert all(not system.store.exists(o) for o in retired)
+    system.compact()
+    system.gc()
+    check_storage_liveness(system, max_byte_amplification=RESIDUAL_AMP)
+    assert system.metadata.check_convergence()
+
+
+def test_stale_swap_mutates_nothing_and_orphans_the_new_object():
+    """Liveness moved between the plan and the proposal: the swap must
+    reject wholesale, leave every index untouched, and enqueue the
+    just-PUT compacted object on the §13 zero-ref orphan path."""
+    system = BoltSystem(group_commit=GroupCommitConfig(max_records=10_000))
+    root = system.create_log("r")
+    root.append(b"base").wait()
+    keeper = root.cfork()
+    goner = root.cfork()                           # co-located siblings
+    keeper.append(b"kept" * 8)
+    goner.append(b"doomed" * 32)
+    system.flush()                                 # shared segment
+    goner.squash()
+    system.gc()
+    plan = system.compactor._plan()
+    assert plan is not None
+    new_object_id, payload, mapping, _ = plan
+    system.store.put(new_object_id, payload)
+    # the race: a RIVAL compactor quantum retires the same sources first —
+    # by the time this proposal lands, they are no longer compactable
+    sources = [src for src, _ranges in mapping]
+    winner = system.compactor._plan(sources=sources)
+    w_id, w_payload, w_mapping, _ = winner
+    system.store.put(w_id, w_payload)
+    assert system.metadata.propose(
+        ("compact", w_id, len(w_payload), w_mapping))[0] == "ok"
+    outcome = system.metadata.propose(
+        ("compact", new_object_id, len(payload), mapping))
+    assert outcome[0] == "stale"
+    state = system.metadata.state
+    assert state.object_refs.get(new_object_id) == 0   # orphan, queued
+    before = root.read(0, root.tail)
+    system.gc()
+    assert not system.store.exists(new_object_id)
+    assert root.read(0, root.tail) == before
+    check_manifest_audit(state)
+    check_storage_liveness(system, max_byte_amplification=RESIDUAL_AMP)
+
+
+def test_leader_failover_with_compaction_in_flight_converges():
+    system = BoltSystem(group_commit=GroupCommitConfig(max_records=10_000),
+                        n_meta_replicas=3, gc=True,
+                        tiering=TieringConfig(min_age=1))
+    root = system.create_log("r")
+    root.append(b"keep").wait()
+    _churn_multi_log(system, root, rounds=2)
+    before = root.read(0, root.tail)
+    assert system.compact_quantum()                # one swap committed...
+    system.metadata.fail_replica(system.metadata.leader_id)   # ...then failover
+    assert root.read(0, root.tail) == before
+    _churn_multi_log(system, root, rounds=1)
+    before = root.read(0, root.tail)
+    system.compact()
+    system.gc()
+    system.demote()
+    assert root.read(0, root.tail) == before
+    assert system.metadata.check_convergence()
+    check_manifest_audit(system.metadata.state)
+    check_storage_liveness(system, max_byte_amplification=RESIDUAL_AMP)
+
+
+def test_snapshot_install_with_compaction_state_converges():
+    system = BoltSystem(group_commit=GroupCommitConfig(max_records=10_000),
+                        n_meta_replicas=3, snapshot_every=8, gc=True,
+                        tiering=TieringConfig(min_age=1))
+    root = system.create_log("r")
+    root.append(b"keep").wait()
+    _churn_multi_log(system, root, rounds=1)
+    victim = (system.metadata.leader_id + 1) % 3
+    system.metadata.fail_replica(victim)
+    # compaction + demotion while the replica is down
+    system.compact()
+    system.gc()
+    system.demote()
+    _churn_multi_log(system, root, rounds=1)
+    system.compact()
+    system.gc()
+    system.metadata.recover_replica(victim)        # snapshot + suffix replay
+    r = system.metadata.replicas[victim]
+    leader = system.metadata.state
+    assert r.state.object_ref_bytes == leader.object_ref_bytes
+    assert r.state.object_bytes == leader.object_bytes
+    assert r.state.cold_objects == leader.cold_objects
+    assert r.state.compact_epoch == leader.compact_epoch
+    assert system.metadata.check_convergence()
+    check_storage_liveness(system, max_byte_amplification=RESIDUAL_AMP)
+
+
+def test_convergence_digest_covers_compaction_and_tiering_state():
+    system = BoltSystem(n_brokers=2)
+    root = system.create_log("r")
+    root.append(b"a")
+    assert system.metadata.check_convergence()
+    follower = next(r for r in system.metadata.replicas
+                    if r.rid != system.metadata.leader_id)
+    follower.apply_pending()
+    obj = next(iter(follower.state.object_ref_bytes))
+    follower.state.object_ref_bytes[obj] += 1      # byte-manifest drift only
+    assert not system.metadata.check_convergence()
+    follower.state.object_ref_bytes[obj] -= 1
+    assert system.metadata.check_convergence()
+    follower.state.cold_objects.add(obj)           # placement drift only
+    assert not system.metadata.check_convergence()
+
+
+# ---------------------------------------------------------------------------
+# cold tiering (satellite)
+# ---------------------------------------------------------------------------
+
+def _tiered_with_cold_object():
+    """Churned system with one compacted object demoted cold; returns
+    (system, root, cold_object_id, pre-demotion bytes of the whole log)."""
+    system = BoltSystem(group_commit=GroupCommitConfig(max_records=10_000),
+                        gc=True, tiering=TieringConfig(min_age=1,
+                                                       promote_scan_records=4))
+    root = system.create_log("r")
+    for i in range(10):
+        root.append(f"hot-{i}".encode() * 8)
+    _churn_multi_log(system, root, rounds=2)
+    system.compact()
+    system.gc()
+    want = root.read(0, root.tail)
+    demoted = system.demote_quantum()
+    assert demoted
+    # the pre-demotion read warmed the broker page cache; drop those pages so
+    # the next read genuinely exercises the cold store class
+    for b in system.brokers:
+        b.cache.invalidate_object(demoted[0])
+    return system, root, demoted[0], want
+
+
+def test_demoted_object_reads_byte_identical_through_the_cold_class():
+    system, root, cold_obj, want = _tiered_with_cold_object()
+    store = system.store
+    assert store.is_cold(cold_obj)
+    assert store.cold_stored_bytes < store.cold_logical_bytes  # compressed
+    got = root.read(0, root.tail)
+    assert got == want                             # byte-identical via zlib
+    assert store.cold_gets > 0                     # served by the slow class
+
+
+def test_scan_over_cold_range_promotes_back_to_hot():
+    system, root, cold_obj, want = _tiered_with_cold_object()
+    store = system.store
+    assert root.read(0, root.tail) == want         # scan-shaped (>= 4 records)
+    assert not store.is_cold(cold_obj)             # physically promoted
+    assert cold_obj not in system.metadata.state.cold_objects   # and by consensus
+    assert system.tier_stats.rehydrations >= 1
+    assert root.read(0, root.tail) == want         # now hot, still identical
+    check_storage_safety(system)
+
+
+def test_point_read_does_not_promote():
+    system, root, cold_obj, want = _tiered_with_cold_object()
+    store = system.store
+    # a position inside the compacted (now cold) object: the churn suffix
+    pos = root.tail - 1
+    assert root.read(pos, pos + 1) == want[pos:pos + 1]
+    assert store.is_cold(cold_obj)                 # 1 record < scan threshold
+    assert cold_obj in system.metadata.state.cold_objects
+    assert system.tier_stats.rehydrations == 0
+
+
+def test_tally_splits_hot_and_cold_traffic():
+    system, root, cold_obj, want = _tiered_with_cold_object()
+    t0 = OpTally.capture(system)
+    assert root.read(0, root.tail) == want
+    d = OpTally.capture(system).delta(t0)
+    assert d.cold_gets > 0 and d.bytes_get_cold > 0
+    assert d.gets >= d.cold_gets                   # cold is a subset of GETs
+    assert d.bytes_get >= d.bytes_get_cold
+    full = OpTally.capture(system)
+    assert full.cold_demotions >= 1 and full.bytes_demoted > 0
+
+
+def test_tier_resync_converges_placement_to_consensus():
+    system, root, cold_obj, want = _tiered_with_cold_object()
+    store = system.store
+    # drift A: physically promote without consensus (crash mid-promotion)
+    store.rehydrate(cold_obj)
+    store.drop_cold(cold_obj)
+    assert not store.is_cold(cold_obj)
+    assert cold_obj in system.metadata.state.cold_objects
+    fixed = system.tiers.resync()
+    assert fixed == 1 and store.is_cold(cold_obj)
+    # drift B: consensus promoted but the physical move never happened
+    system.metadata.propose(("promote_hot", (cold_obj,)))
+    assert store.is_cold(cold_obj)
+    fixed = system.tiers.resync()
+    assert fixed == 1 and not store.is_cold(cold_obj)
+    assert root.read(0, root.tail) == want         # correct at every point
+    check_storage_safety(system)
+
+
+def test_reaped_cold_object_releases_both_tiers():
+    system = BoltSystem(group_commit=GroupCommitConfig(max_records=10_000),
+                        gc=True, tiering=TieringConfig(min_age=1))
+    root = system.create_log("r")
+    root.append(b"keep").wait()
+    _churn_multi_log(system, root, rounds=1)
+    system.compact()
+    system.gc()
+    demoted = system.demote_quantum()
+    assert demoted
+    # kill the lineage holding the compacted object: squash + promote churn
+    # until its refs die, then gc must clear the cold copy and the consensus
+    # placement record together
+    state = system.metadata.state
+    snap = root.sfork()                            # keeps only a prefix alive?
+    snap.squash()
+    # directly retire via a second compaction of the cold object's spans
+    before = root.read(0, root.tail)
+    system.metadata.propose(("promote_hot", tuple(demoted)))
+    system.tiers.resync()
+    plan = system.compactor._plan(sources=demoted)
+    if plan is not None:
+        new_id, payload, mapping, _ = plan
+        system.store.put(new_id, payload)
+        assert system.metadata.propose(
+            ("compact", new_id, len(payload), mapping))[0] == "ok"
+    system.gc()
+    for obj in demoted:
+        assert not system.store.exists(obj)
+        assert obj not in state.cold_objects
+    assert root.read(0, root.tail) == before
+    check_manifest_audit(state)
+    check_storage_safety(system)
+
+
+def test_tiering_parameter_validation():
+    assert isinstance(BoltSystem(tiering=True).store, TieredObjectStore)
+    assert isinstance(BoltSystem(tiering=TieringConfig()).store,
+                      TieredObjectStore)
+    assert isinstance(BoltSystem().store, MemoryObjectStore)
+    with pytest.raises(TypeError, match="TieredObjectStore"):
+        BoltSystem(store=MemoryObjectStore(), tiering=True)
+    with pytest.raises(ValueError):
+        BoltSystem(tiering=-3)
+    with pytest.raises(TypeError):
+        BoltSystem(compaction="yes")
+    with pytest.raises(ValueError):
+        BoltSystem(compaction=0)
+
+
+# ---------------------------------------------------------------------------
+# property suite: epoch equivalence under random interleavings
+# ---------------------------------------------------------------------------
+
+class CompactionTraceRunner(GCTraceRunner):
+    """The §13 trace runner with three §14 extensions to the op mix:
+    speculation sessions (abort- and commit-shaped, mirrored in the oracle
+    as cfork+squash / cfork+append+promote), compaction quanta, and —
+    around every compact — an epoch-equivalence assertion: the full
+    readable prefix of every live slot, byte-compared before and after."""
+
+    def _slot_reads(self):
+        out = {}
+        for slot in sorted(self.slots):
+            log, oid = self.slots[slot]
+            hi = self.oracle.visible_tail(oid)
+            try:
+                out[slot] = log.read(0, hi)
+            except AgileLogError as e:   # capped by an ancestor's hold
+                out[slot] = type(e).__name__
+        return out
+
+    def _epoch(self):
+        before = self._slot_reads()
+        self.system.compact_quantum()
+        assert self._slot_reads() == before, "compaction epoch changed bytes"
+
+    def _speculate(self):
+        slot = self._pick()
+        log, oid = self.slots[slot]
+        recs = [f"sp{self._rec + i}".encode() * self.rng.randint(1, 6)
+                for i in range(self.rng.randint(1, 3))]
+        self._rec += len(recs)
+        commit = self.rng.random() < 0.5
+
+        def sys_fn():
+            with log.speculate() as s:
+                s.append_batch(recs)
+                if commit:
+                    s.commit()
+            return True
+
+        def ora_fn():
+            cid = self.oracle.cfork(oid, True)
+            if commit:
+                self.oracle.append(cid, recs)
+                self.oracle.promote(cid)
+            else:
+                self.oracle.squash(cid)
+            return True
+
+        self._both(sys_fn, ora_fn)
+
+    def step(self):
+        r = self.rng.random()
+        if r < 0.12:
+            self._epoch()
+            check_manifest_audit(self.system.metadata.state)
+        elif r < 0.24:
+            self._speculate()
+            self._prune()
+            check_manifest_audit(self.system.metadata.state)
+        else:
+            super().step()
+
+    def finish(self):
+        super().finish()                           # quiesce + gc + §13 checks
+        before = self._slot_reads()
+        self.system.compact()                      # drain the epoch fully
+        self.system.gc()
+        assert self._slot_reads() == before
+        check_manifest_audit(self.system.metadata.state)
+        check_storage_safety(self.system)
+        check_storage_liveness(self.system,
+                               max_byte_amplification=RESIDUAL_AMP)
+
+
+@pytest.mark.parametrize("promote_mode", ["copy", "splice"])
+@given(seed=st.integers(min_value=0, max_value=100_000))
+@settings(max_examples=10, deadline=None)
+def test_epoch_equivalence_under_random_interleavings(promote_mode, seed):
+    runner = CompactionTraceRunner(seed, promote_mode)
+    for _ in range(40):
+        runner.step()
+    runner.finish()
+
+
+@given(seed=st.integers(min_value=0, max_value=100_000),
+       flush_every=st.integers(min_value=2, max_value=6))
+@settings(max_examples=8, deadline=None)
+def test_epoch_equivalence_under_group_commit_churn(seed, flush_every):
+    """Multi-log segments (§9) under fork churn with compaction, demotion,
+    and promotion interleaved: the root and every surviving fork must read
+    byte-identically across every epoch, and the final amplification must
+    land under the residual bound."""
+    rng = random.Random(seed)
+    system = BoltSystem(n_brokers=3,
+                        group_commit=GroupCommitConfig(max_records=10_000),
+                        tiering=TieringConfig(min_age=1))
+    root = system.create_log("r")
+    root.append(b"base").wait()
+    live = [root.cfork() for _ in range(3)]
+    state = system.metadata.state
+
+    def reads():
+        return [root.read(0, root.tail)] + [f.read(0, f.tail) for f in live]
+
+    for i in range(36):
+        op = rng.random()
+        if op < 0.45 and live:
+            rng.choice(live).append(f"x{i}".encode() * rng.randint(1, 6))
+        elif op < 0.60:
+            live.append(root.cfork())
+        elif op < 0.72 and live:
+            victim = live.pop(rng.randrange(len(live)))
+            victim.squash()
+        elif op < 0.82:
+            system.gc_quantum(limit=rng.randint(1, 3))
+        elif op < 0.92:
+            before = reads()
+            system.compact_quantum()
+            assert reads() == before, "epoch changed bytes mid-churn"
+        else:
+            before = reads()
+            system.demote_quantum()
+            assert reads() == before, "demotion changed bytes mid-churn"
+        if i % flush_every == 0:
+            system.flush()
+        check_manifest_audit(state)
+    system.flush()
+    before_root = root.read(0, root.tail)
+    for f in live:
+        f.squash()
+    system.gc()
+    system.compact()
+    system.gc()
+    system.demote()
+    assert root.read(0, root.tail) == before_root
+    check_storage_safety(system)
+    check_storage_liveness(system, max_byte_amplification=RESIDUAL_AMP)
+    assert system.metadata.check_convergence()
