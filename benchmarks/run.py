@@ -18,6 +18,7 @@ from .bench_agent import bench_agent
 from .bench_agents import bench_agents
 from .bench_append import bench_append
 from .bench_cforks import bench_cfork_ablation, bench_many_cforks
+from .bench_chaos import bench_chaos
 from .bench_forks import (bench_fork_impact, bench_fork_latency,
                           bench_lookup_depth, bench_metadata_memory,
                           bench_promote)
@@ -43,6 +44,7 @@ ALL = [
     ("meta_path", bench_meta),
     ("agent_sessions", bench_agent),
     ("segment_gc", bench_gc),
+    ("chaos_availability", bench_chaos),
     ("data_pipeline", bench_pipeline),
     ("roofline", bench_roofline),
 ]

@@ -12,6 +12,9 @@ Layers (bottom-up):
   compact     — segment compaction + cold tiering: live-byte manifests,
                 consensus-ordered index swaps, age-based demotion into a
                 compressed store class (DESIGN.md §14)
+  faults      — deterministic fault-injection plane + client retry policy
+                (seeded per-site probabilities, DES-time kill/recover
+                schedules, bounded backoff — DESIGN.md §15)
   api         — the agent-session client API (receipts, speculation sessions,
                 tailing subscriptions — DESIGN.md §12) + BoltSystem wiring
   sim         — deterministic DES used by isolation benchmarks
@@ -22,8 +25,11 @@ from .api import (AgileLog, AppendReceipt, BoltSystem, CommitResult,
 from .broker import GroupCommitConfig
 from .compact import (CompactionConfig, Compactor, CompactStats, TieringConfig,
                       TierManager, TierStats)
-from .errors import (AgileLogError, ConflictError, ForkBlocked,
-                     InvalidOperation, UnknownLog)
+from .errors import (AgileLogError, AmbiguousProposal, BrokerCrashed,
+                     ConflictError, ForkBlocked, InvalidOperation,
+                     NoLiveBrokers, NoQuorum, RetryBudgetExhausted, StoreFault,
+                     Unavailable, UnknownLog)
+from .faults import FaultConfig, FaultPlane, RetryPolicy, RetryStats
 from .gc import GarbageCollector, GCConfig, GCStats
 from .objectstore import TieredObjectStore
 
@@ -32,6 +38,9 @@ __all__ = [
     "Subscription", "GroupCommitConfig", "GarbageCollector", "GCConfig",
     "GCStats", "CompactionConfig", "Compactor", "CompactStats",
     "TieringConfig", "TierManager", "TierStats", "TieredObjectStore",
+    "FaultConfig", "FaultPlane", "RetryPolicy", "RetryStats",
     "AgileLogError", "ConflictError", "ForkBlocked",
     "InvalidOperation", "UnknownLog",
+    "Unavailable", "NoQuorum", "NoLiveBrokers", "StoreFault",
+    "BrokerCrashed", "AmbiguousProposal", "RetryBudgetExhausted",
 ]

@@ -51,7 +51,10 @@ from typing import (Callable, Dict, Iterator, List, Optional, Sequence, Set,
 from .broker import Broker, GroupCommitConfig, PendingAppend
 from .compact import (Compactor, CompactionConfig, CompactStats, TierManager,
                       TieringConfig, TierStats)
-from .errors import AgileLogError, ConflictError, InvalidOperation, UnknownLog
+from .errors import (AgileLogError, BrokerCrashed, ConflictError,
+                     InvalidOperation, NoLiveBrokers, UnknownLog)
+from .faults import (FaultConfig, FaultPlane, RetryPolicy, RetryStats,
+                     run_with_retries)
 from .gc import GarbageCollector, GCConfig, GCStats
 from .objectstore import MemoryObjectStore, ObjectStore, TieredObjectStore
 from .raft import MetadataService
@@ -100,7 +103,16 @@ class AppendReceipt:
         the deterministic append error if there was one, return self."""
         p = self._pending
         if not p.done:
-            p.broker.flush()
+            fleet = p.broker.fleet
+            if fleet is not None:
+                # route through the fleet's retry layer (§15): if the owning
+                # broker crashes mid-flush, failover re-points p.broker at
+                # the adopter and the retry flushes THERE — the receipt
+                # resolves with the surviving positions
+                fleet._retrying(
+                    lambda _a: None if p.done else p.broker.flush())
+            else:
+                p.broker.flush()
         if p._error is not None:
             raise p._error
         return self
@@ -510,7 +522,9 @@ class BoltSystem:
                  pipeline_apply: bool = True,
                  gc: Union[None, bool, int, GCConfig] = None,
                  compaction: Union[None, bool, int, CompactionConfig] = None,
-                 tiering: Union[None, bool, int, TieringConfig] = None) -> None:
+                 tiering: Union[None, bool, int, TieringConfig] = None,
+                 faults: Union[None, bool, FaultConfig, FaultPlane] = None,
+                 retry: Optional[RetryPolicy] = None) -> None:
         if group_commit is True:
             group_commit = GroupCommitConfig()
         elif group_commit is False or group_commit == 0:
@@ -601,12 +615,46 @@ class BoltSystem:
         if isinstance(self.store, TieredObjectStore):
             for b in self.brokers:
                 b.tiering = self.tiers   # read-path promotion hook (§14)
+        # -- fault plane + retry policy (DESIGN.md §15). Same config shape:
+        # None/False -> no plane (every path below is byte-identical to the
+        # pre-§15 system: no retries, no token wrapping, no fault draws),
+        # True -> a plane with the default seed and all probabilities zero
+        # (deterministic schedules can still be driven via plane.advance()),
+        # FaultConfig -> a fresh plane over it, FaultPlane -> as given.
+        if faults is True:
+            faults = FaultPlane(FaultConfig())
+        elif faults is False or faults is None:
+            faults = None
+        elif isinstance(faults, FaultConfig):
+            faults = FaultPlane(faults)
+        elif not isinstance(faults, FaultPlane):
+            raise TypeError(f"faults must be None, bool, FaultConfig, or "
+                            f"FaultPlane, got {type(faults).__name__}")
+        self.faults: Optional[FaultPlane] = faults
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.retry_stats = RetryStats()   # shared with the metadata layer
+        self.broker_failovers = 0
+        if faults is not None:
+            faults.bind(self)
+            self.store.attach_faults(faults)
+            self.metadata.faults = faults
+            self.metadata.retry = self.retry
+            self.metadata.retry_stats = self.retry_stats
+            for b in self.brokers:
+                b.faults = faults
+        for b in self.brokers:
+            b.fleet = self   # receipts route flush through retry/failover
 
     # -- group commit (DESIGN.md §9) ------------------------------------------------
     def flush(self) -> None:
-        """Commit every broker's staging buffer (no-op when group commit is off)."""
+        """Commit every broker's staging buffer (no-op when group commit is
+        off). With a fault plane active, each flush runs under the retry
+        policy: a broker that crashes mid-flush fails over and the re-routed
+        staging commits through its survivor."""
         for b in self.brokers:
-            b.flush()
+            if b.broker_id in self._dead:
+                continue
+            self._retrying(lambda _a, b=b: self.live_broker(b).flush())
 
     # -- segment GC (DESIGN.md §13) -------------------------------------------------
     def gc(self, arrival: Optional[float] = None) -> GCStats:
@@ -730,17 +778,45 @@ class BoltSystem:
         log_id = self.metadata.propose(("create_root", name))
         return AgileLog(self, log_id, self._broker_for_root())
 
-    # -- broker failover (straggler mitigation, DESIGN.md §6) -----------------------
+    # -- broker failover (straggler mitigation §6; crash recovery §15) --------------
     def fail_broker(self, broker_id: int) -> None:
-        """Mark a broker dead; clients transparently re-route (brokers are
-        stateless — §5.2 — so reassignment is metadata-free; the object cache
-        and any *unflushed* group-commit staging — records that were never
-        acked — are the only loss)."""
+        """Mark a broker dead and fail its staged group-commit records OVER
+        to a surviving broker (DESIGN.md §15): brokers are stateless (§5.2),
+        so the only broker-private state is the object cache (rebuildable)
+        and the unflushed staging buffer. The staged records were never
+        acked, so re-routing them preserves exactly-once: the survivor's
+        next flush commits them under a fresh segment id, and the receipts
+        resolve with the surviving positions. Orphaned PUTs the crashed
+        broker noted (torn or unproposed segments) go to the §13 reaper's
+        resync path. Only with NO survivor do the pendings fail."""
+        if broker_id in self._dead:
+            return
         self._dead.add(broker_id)
-        self.brokers[broker_id].discard_staging()
+        dead = self.brokers[broker_id]
         for parent, b in list(self._fork_broker.items()):
             if b == broker_id:
                 del self._fork_broker[parent]
+        self.collector.note_orphans(dead.take_orphans())
+        staged = dead.take_staging()
+        if not staged:
+            return
+        survivor = next((b for b in self.brokers
+                         if b.broker_id not in self._dead), None)
+        if survivor is None:
+            for pending, _records in staged:
+                pending._fail(NoLiveBrokers(
+                    f"broker {broker_id} failed with no live peer; "
+                    f"append not committed"), 0.0)
+            return
+        survivor.adopt_staging(staged)
+        self.broker_failovers += 1
+
+    def recover_broker(self, broker_id: int) -> None:
+        """Restart a dead broker (DESIGN.md §15). Brokers are stateless
+        (§5.2), so recovery is just rejoining the fleet: the cache refills
+        on demand and staging starts empty. Any orphan PUT notes it carried
+        were already handed to the §13 reaper at failure time."""
+        self._dead.discard(broker_id)
 
     def live_broker(self, preferred: Broker) -> Broker:
         if preferred.broker_id not in self._dead:
@@ -748,7 +824,32 @@ class BoltSystem:
         for b in self.brokers:
             if b.broker_id not in self._dead:
                 return b
-        raise RuntimeError("no live brokers")
+        raise NoLiveBrokers("no live brokers")
+
+    # -- data-plane retry (DESIGN.md §15) -------------------------------------------
+    def _retrying(self, fn):
+        """Run a data-plane operation under the client retry policy when a
+        fault plane is active (plain synchronous call otherwise). On a
+        :class:`BrokerCrashed` the crashed broker is failed over BEFORE the
+        backoff, so the retry routes through a survivor via ``live_broker``.
+        Metadata-level transients never reach here with budget left — the
+        metadata layer retries them internally with the SAME idempotency
+        token — and its ``RetryBudgetExhausted`` is not re-retried (the
+        helper re-raises it immediately), so budgets never multiply."""
+        plane = self.faults
+        if plane is None or not plane.enabled:
+            return fn(1)
+
+        def attempt(i):
+            try:
+                return fn(i)
+            except BrokerCrashed as e:
+                if e.broker_id is not None:
+                    self.fail_broker(e.broker_id)
+                raise
+
+        return run_with_retries(attempt, self.retry, plane.rng,
+                                stats=self.retry_stats)
 
 
 class AgileLog:
@@ -773,29 +874,36 @@ class AgileLog:
         operations (tails, forks, promote, squash) must observe the caller's
         own prior appends (read-your-writes, DESIGN.md §9), so they flush a
         staging buffer holding records of this log first."""
-        b = self._b()
-        b._flush_if_staged(self.log_id)
-        return b
+        self.system._retrying(
+            lambda _a: self._b()._flush_if_staged(self.log_id))
+        return self._b()
 
     def append(self, record: bytes) -> AppendReceipt:
         """Append one record; always returns an :class:`AppendReceipt` —
         resolved immediately in per-call mode (deterministic errors raise
-        here), at flush in group-commit mode (errors raise at ``wait()``)."""
-        return AppendReceipt(self._b().submit(self.log_id, [record]))
+        here), at flush in group-commit mode (errors raise at ``wait()``).
+        With a fault plane active (§15) transient failures retry under the
+        client policy, failing over to a surviving broker if ours crashes."""
+        return AppendReceipt(self.system._retrying(
+            lambda _a: self._b().submit(self.log_id, [record])))
 
     def append_batch(self, records: Sequence[bytes]) -> AppendReceipt:
         """Append a batch atomically; one receipt covering every record."""
-        return AppendReceipt(self._b().submit(self.log_id, list(records)))
+        recs = list(records)
+        return AppendReceipt(self.system._retrying(
+            lambda _a: self._b().submit(self.log_id, recs)))
 
     def flush(self) -> None:
         """Commit this log's staged records (group commit, DESIGN.md §9).
         Only flushes the broker staging buffer if records of THIS log are in
         it — other logs' staged batches keep accumulating. Use
         ``BoltSystem.flush()`` for the global flush."""
-        self._b()._flush_if_staged(self.log_id)
+        self.system._retrying(
+            lambda _a: self._b()._flush_if_staged(self.log_id))
 
     def read(self, lo: int, hi: int) -> List[bytes]:
-        records, _ = self._b().read_records(self.log_id, lo, hi)
+        records, _ = self.system._retrying(
+            lambda _a: self._b().read_records(self.log_id, lo, hi))
         return records
 
     def scan(self, lo: int = 0, hi: Optional[int] = None,
@@ -822,10 +930,15 @@ class AgileLog:
         return self._scan_iter(lo, hi, batch)
 
     def _scan_iter(self, lo: int, hi: int, batch: int) -> Iterator[bytes]:
+        # each chunk re-resolves the broker AND runs under the retry policy:
+        # a scan survives its broker dying mid-iteration (§15) — the next
+        # chunk (or the retried current one) reads through a survivor
         pos = lo
         while pos < hi:
             chunk_hi = min(pos + batch, hi)
-            records, _ = self._b().read_records(self.log_id, pos, chunk_hi)
+            records, _ = self.system._retrying(
+                lambda _a, lo_=pos, hi_=chunk_hi:
+                    self._b().read_records(self.log_id, lo_, hi_))
             yield from records
             pos = chunk_hi
 

@@ -26,7 +26,7 @@ from dataclasses import dataclass
 from typing import List, Optional, Sequence, Tuple
 
 from . import errors as _errors
-from .errors import AgileLogError
+from .errors import AgileLogError, BrokerCrashed, Unavailable
 from .objectstore import LRUObjectCache, ObjectStore, SegmentWriter
 from .sim import Resource, ServiceTimes, Simulator
 
@@ -129,6 +129,15 @@ class Broker:
         # store is tiered; scan-shaped reads that touched cold objects are
         # reported so the TierManager can promote them back to hot
         self.tiering = None
+        # fault plane + fleet hooks (DESIGN.md §15): `faults` is consulted at
+        # the crash windows (between an object PUT and its proposal);
+        # `fleet` is the owning BoltSystem, so receipts can route their
+        # flush through the retry/failover layer. `_orphan_puts` notes keys
+        # this broker PUT but may never have proposed — the §13 reaper's
+        # resync() sweeps the ones consensus indeed never saw.
+        self.faults = None
+        self.fleet = None
+        self._orphan_puts: set = set()
 
     # -- data path ----------------------------------------------------------------
     def append(self, log_id: int, records: Sequence[bytes],
@@ -150,8 +159,28 @@ class Broker:
             lengths.append(len(r))
             off += len(r)
         segment = (object_id, tuple(offsets), tuple(lengths))
-        self.store.put(object_id, payload)
-        positions = self.metadata.propose(("append", log_id) + segment)
+        try:
+            self.store.put(object_id, payload)
+        except Unavailable:
+            # a torn PUT may have landed a prefix under this key; the retry
+            # uses a fresh id, so note the carcass for the resync sweep
+            self._orphan_puts.add(object_id)
+            raise
+        if self.faults is not None and self.faults.fire("broker_crash_append"):
+            # crash in the PUT->proposal window: the object is durable but
+            # never sequenced — an orphan. The fleet layer fails this broker
+            # over; the client retries through a survivor (fresh object id).
+            self._orphan_puts.add(object_id)
+            raise BrokerCrashed(
+                f"broker {self.broker_id} crashed after PUT {object_id}, "
+                "before its proposal (injected)", broker_id=self.broker_id)
+        try:
+            positions = self.metadata.propose(("append", log_id) + segment)
+        except Unavailable:
+            # proposal outcome unknown/failed with the PUT already durable:
+            # if consensus never saw the object, resync reclaims it
+            self._orphan_puts.add(object_id)
+            raise
         self.appends += 1
         done = self._book(arrival, write_bytes=len(payload))
         return positions, done, segment
@@ -201,7 +230,13 @@ class Broker:
                 and self._staged_first_arrival is not None
                 and arrival - self._staged_first_arrival >= cfg.max_delay):
             # DES-time deadline: the old batch must not wait for this record
-            self.flush(arrival=arrival)
+            self._auto_flush(arrival)
+        fleet = self.fleet
+        if fleet is not None and self.broker_id in fleet._dead:
+            # THIS broker died during the deadline flush (§15): its staging
+            # already failed over — stage the new record on a survivor so it
+            # rides live flush paths, not a dead broker's buffer
+            return fleet.live_broker(self).stage(log_id, records, arrival)
         pending = PendingAppend(self, log_id, len(records))
         self._staged.append((pending, list(records)))
         self._staged_bytes += sum(len(r) for r in records)
@@ -211,8 +246,29 @@ class Broker:
         self.appends += 1
         if (self._staged_records >= cfg.max_records
                 or self._staged_bytes >= cfg.max_bytes):
-            self.flush(arrival=arrival)
+            self._auto_flush(arrival)
         return pending
+
+    def _auto_flush(self, arrival: Optional[float]) -> None:
+        """A threshold/deadline flush from inside ``stage()``. The record is
+        already safely staged EXACTLY ONCE by this point (or about to be),
+        so a transient flush failure must NOT propagate out of ``submit`` —
+        the caller's retry layer would re-submit and commit the record
+        twice. With a fleet retry layer attached, transients retry here
+        (broker failover included); an exhausted budget leaves the batch
+        staged — possibly on a survivor — and the error surfaces at
+        ``wait()``/``flush()``, where retrying is duplicate-safe. Without a
+        plane, failures propagate exactly as pre-§15."""
+        fleet = self.fleet
+        if (fleet is None or fleet.faults is None
+                or not fleet.faults.enabled):
+            self.flush(arrival=arrival)
+            return
+        try:
+            fleet._retrying(
+                lambda _a: fleet.live_broker(self).flush(arrival=arrival))
+        except Unavailable:
+            pass   # batch still staged (here or failed-over); ack deferred
 
     def flush(self, arrival: Optional[float] = None) -> float:
         """Commit the staging buffer: ONE segment-object PUT + ONE batched
@@ -231,10 +287,46 @@ class Broker:
         payload, entries = writer.finish()
         object_id = f"seg-{self.broker_id}-{next(_obj_counter)}"
         try:
-            self.store.put(object_id, payload)
-            outcomes = self.metadata.propose(
-                ("append_batch_multi",
-                 tuple((lid, object_id, offs, lens) for lid, offs, lens in entries)))
+            try:
+                self.store.put(object_id, payload)
+            except Unavailable:
+                self._orphan_puts.add(object_id)   # torn prefix, maybe
+                raise
+            if (self.faults is not None
+                    and self.faults.fire("broker_crash_flush")):
+                # crash between the segment PUT and the batched proposal
+                # (DESIGN.md §15): the segment is an orphan, and the staged
+                # records were never acked — put them BACK so the fleet
+                # layer's failover re-routes them to a surviving broker
+                # (fresh segment, fresh PUT) and the receipts still resolve.
+                self._orphan_puts.add(object_id)
+                self._restage(staged)
+                raise BrokerCrashed(
+                    f"broker {self.broker_id} crashed after segment PUT "
+                    f"{object_id}, before its proposal (injected)",
+                    broker_id=self.broker_id)
+            try:
+                outcomes = self.metadata.propose(
+                    ("append_batch_multi",
+                     tuple((lid, object_id, offs, lens)
+                           for lid, offs, lens in entries)))
+            except Unavailable:
+                self._orphan_puts.add(object_id)
+                raise
+        except Unavailable as e:
+            if self.faults is not None and self.faults.enabled:
+                # transient under an active fault plane: nothing was acked
+                # and nothing failed permanently — re-stage so the retry
+                # layer (or a broker failover) can commit the batch on the
+                # next attempt with a fresh segment id
+                if not isinstance(e, BrokerCrashed):
+                    self._restage(staged)
+                raise
+            # no retry layer attached: surface the loss exactly as pre-§15 —
+            # every pending FAILS (None would masquerade as §4.1 "withheld")
+            for pending, _entry_index, _start in slices:
+                pending._fail(AgileLogError(f"group-commit flush failed: {e}"), 0.0)
+            raise
         except Exception as e:
             # a failed flush (store error, lost metadata quorum) must not
             # strand the batch: nothing was acked, so every pending FAILS —
@@ -260,6 +352,41 @@ class Broker:
                 exc_cls = getattr(_errors, exc_name, AgileLogError)
                 pending._fail(exc_cls(msg), done)
         return done
+
+    def _restage(self, staged) -> None:
+        """Put a popped staging batch back (front of the buffer, original
+        order) after a transient flush failure: nothing was acked, so the
+        records are still pending — the next flush attempt recommits them."""
+        self._staged = list(staged) + self._staged
+        self._staged_bytes += sum(len(r) for _p, recs in staged for r in recs)
+        self._staged_records += sum(len(recs) for _p, recs in staged)
+
+    def take_staging(self):
+        """Broker failover (DESIGN.md §15): surrender the staging buffer to
+        the fleet layer so a surviving broker can adopt it. The pendings stay
+        unresolved — they will be acked by the adopter's flush."""
+        staged, self._staged = self._staged, []
+        self._staged_bytes = 0
+        self._staged_records = 0
+        self._staged_first_arrival = None
+        return staged
+
+    def adopt_staging(self, staged) -> None:
+        """Adopt staged records from a crashed peer: re-point each pending at
+        this broker (receipts route their flush here) and append the batch to
+        the local buffer. The peer's PUT (if any) is orphaned garbage — the
+        adopter re-PUTs everything under a fresh segment id at flush."""
+        for pending, _records in staged:
+            pending.broker = self
+        self._staged.extend(staged)
+        self._staged_bytes += sum(len(r) for _p, recs in staged for r in recs)
+        self._staged_records += sum(len(recs) for _p, recs in staged)
+
+    def take_orphans(self) -> set:
+        """Hand the noted orphan PUT keys (torn/unproposed segments) to the
+        caller — the §13 reaper resync path — and forget them locally."""
+        orphans, self._orphan_puts = self._orphan_puts, set()
+        return orphans
 
     def discard_staging(self) -> None:
         """Broker failure: staged records were never acked, so they are LOST,

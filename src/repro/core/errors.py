@@ -43,3 +43,61 @@ class ConflictError(AgileLogError):
 
 class NotLeader(AgileLogError):
     """Metadata proposal sent to a non-leader replica."""
+
+
+class Unavailable(AgileLogError):
+    """A layer of the system cannot serve the request *right now* (DESIGN.md
+    §15). Unlike the deterministic command errors above, unavailability is
+    transient-by-contract: the client retry policy treats every subclass as
+    retryable (replicas recover, brokers fail over, leaders get re-elected).
+    """
+
+
+class NoQuorum(Unavailable):
+    """The metadata layer lost its majority: proposals cannot commit and a
+    leader cannot be elected until enough replicas recover."""
+
+
+class NoLiveBrokers(Unavailable):
+    """Every broker in the fleet is marked dead; there is nowhere to route
+    the data-plane request."""
+
+
+class StoreFault(Unavailable):
+    """An injected (or, with a real backend, observed) object-store failure:
+    a PUT/GET/DELETE that did not complete. A *torn* PUT raises this after
+    durably writing a prefix of the payload — the caller must treat the key
+    as garbage until a full re-PUT succeeds (DESIGN.md §15)."""
+
+
+class BrokerCrashed(Unavailable):
+    """A broker died mid-operation (injected, DESIGN.md §15) — typically in
+    the window after an object PUT and before its metadata proposal. The
+    fleet layer fails the broker over on sight: staged group-commit records
+    move to a surviving broker, the orphaned PUT goes to the §13 reaper."""
+
+    def __init__(self, msg: str, broker_id=None) -> None:
+        super().__init__(msg)
+        self.broker_id = broker_id
+
+
+class AmbiguousProposal(Unavailable):
+    """A propose() timed out after the entry may have committed (DESIGN.md
+    §15): the command is possibly applied, possibly not. Safe to retry ONLY
+    with the same idempotency token — the replicated dedup table makes the
+    retry apply-at-most-once."""
+
+    def __init__(self, msg: str, token=None) -> None:
+        super().__init__(msg)
+        self.token = token          # the idempotency token to retry with
+
+
+class RetryBudgetExhausted(Unavailable):
+    """The client retry policy gave up: every attempt hit an Unavailable
+    error and the bounded backoff budget ran out. Carries the last cause."""
+
+    def __init__(self, msg: str, attempts: int = 0,
+                 last_error: Exception = None) -> None:
+        super().__init__(msg)
+        self.attempts = attempts
+        self.last_error = last_error

@@ -1,0 +1,246 @@
+"""Deterministic fault-injection plane + client retry policy (DESIGN.md §15).
+
+The paper's availability story — stateless brokers can die without losing
+data, the metadata layer is "a fault-tolerant group" (§5.2) — is only real if
+the request path has defined behavior when things actually fail. This module
+is the single switchboard for making them fail *on purpose, reproducibly*:
+
+* :class:`FaultConfig` — per-site probabilities (store PUT/GET/DELETE errors,
+  torn partial PUTs, committed-but-unacked propose ambiguity, leader crash
+  mid-operation, broker crash between the segment PUT and its proposal) plus
+  a DES-time **schedule** of discrete events (kill/recover a broker, replica,
+  or the current leader at simulated time *t*).
+* :class:`FaultPlane` — one seeded ``random.Random`` drives every probability
+  draw in *consultation order*, so a given (seed, workload) pair replays the
+  identical fault sequence; counters record what actually fired.
+* :class:`RetryPolicy` / :func:`run_with_retries` — the client-side answer:
+  bounded retries with exponential backoff + deterministic jitter. Every
+  transient failure surfaces as :class:`~repro.core.errors.Unavailable`; the
+  budget's end is a typed :class:`~repro.core.errors.RetryBudgetExhausted`.
+
+Layering contract (who consults what):
+
+* Object stores consult ``on_put``/``on_get``/``on_delete`` (attached via
+  ``ObjectStore.attach_faults``). A *torn* PUT durably writes a prefix and
+  then raises — the caller must treat the key as garbage until a full re-PUT
+  lands (retries use fresh object ids; the torn orphan is swept by the §13
+  reaper's ``resync``).
+* ``MetadataService`` consults ``leader_crash`` (the leader dies mid-propose,
+  before the entry is appended) and ``propose_unacked`` (the entry committed
+  and applied, but the ack is lost — the client sees
+  :class:`~repro.core.errors.AmbiguousProposal` and may retry **only** with
+  the same idempotency token, deduplicated in the replicated state).
+* Brokers consult ``broker_crash_flush``/``broker_crash_append`` (death in
+  the window after the object PUT, before the metadata proposal: the PUT is
+  an orphan, staged records fail over to a surviving broker).
+
+The plane is inert by default: a ``BoltSystem`` without ``faults=`` never
+draws, never retries, and behaves byte-identically to the pre-§15 system.
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Tuple
+
+from .errors import RetryBudgetExhausted, StoreFault, Unavailable
+
+
+#: Schedule event kinds understood by :meth:`FaultPlane.advance`.
+SCHEDULE_KINDS = ("kill_broker", "kill_leader", "kill_replica",
+                  "recover_replica")
+
+
+@dataclass
+class FaultConfig:
+    """Per-site fault probabilities + a DES-time event schedule (§15).
+
+    Probabilities are consulted per operation at the named site; ``0.0``
+    disables the site without spending an RNG draw, so adding a site to a
+    config never perturbs the fault sequence of the others. ``schedule`` is
+    a tuple of ``(time, kind, target)`` events in simulated seconds —
+    ``kind`` one of :data:`SCHEDULE_KINDS`, ``target`` the broker/replica id
+    (ignored for ``kill_leader``). Events fire when :meth:`FaultPlane.advance`
+    first observes a time >= theirs."""
+
+    seed: int = 0xFA177
+    store_put_error: float = 0.0      # clean PUT failure: nothing written
+    store_put_torn: float = 0.0       # torn PUT: a prefix lands, then error
+    store_get_error: float = 0.0
+    store_delete_error: float = 0.0
+    propose_unacked: float = 0.0      # committed, applied, ack lost (§15)
+    leader_crash: float = 0.0         # leader dies mid-propose (pre-append)
+    broker_crash_flush: float = 0.0   # broker dies between seg PUT + proposal
+    broker_crash_append: float = 0.0  # same window on the per-call path
+    schedule: Tuple[Tuple[float, str, Optional[int]], ...] = ()
+
+
+class FaultPlane:
+    """Seeded switchboard the wired layers consult (DESIGN.md §15).
+
+    ``enabled`` gates every probability site (schedules still fire): the
+    test harness heals the system by flipping it off before running the
+    final oracles, without losing the counters of what was injected."""
+
+    def __init__(self, config: Optional[FaultConfig] = None) -> None:
+        self.config = config or FaultConfig()
+        self.rng = random.Random(self.config.seed)
+        self.enabled = True
+        self.counters: Dict[str, int] = {}
+        self._pending_events = sorted(self.config.schedule)
+        self.events_fired: list = []
+        self._system = None           # bound BoltSystem (for schedules)
+
+    # -- wiring --------------------------------------------------------------
+    def bind(self, system) -> None:
+        """Attach the BoltSystem whose brokers/replicas schedules target."""
+        self._system = system
+
+    def note(self, site: str, n: int = 1) -> None:
+        self.counters[site] = self.counters.get(site, 0) + n
+
+    @property
+    def total_injected(self) -> int:
+        return sum(self.counters.values())
+
+    def fire(self, site: str) -> bool:
+        """One probability draw at ``site``; counts and reports a hit.
+        Zero-probability sites never draw, keeping fault sequences stable
+        under config extension."""
+        if not self.enabled:
+            return False
+        p = getattr(self.config, site)
+        if p <= 0.0:
+            return False
+        if self.rng.random() < p:
+            self.note(site)
+            return True
+        return False
+
+    def heal(self) -> None:
+        """Stop injecting (counters and remaining schedule are preserved)."""
+        self.enabled = False
+
+    # -- store sites ---------------------------------------------------------
+    def on_put(self, key: str, data: bytes):
+        """Consulted by the store before a PUT. Returns ``(payload, error)``:
+        the bytes to durably write (``None`` for nothing) and the error to
+        raise after writing them (``None`` for success)."""
+        if self.fire("store_put_torn"):
+            cut = self.rng.randrange(0, max(1, len(data)))
+            return data[:cut], StoreFault(
+                f"injected torn PUT of {key}: {cut}/{len(data)} bytes landed")
+        if self.fire("store_put_error"):
+            return None, StoreFault(f"injected PUT failure for {key}")
+        return data, None
+
+    def on_get(self, key: str) -> None:
+        if self.fire("store_get_error"):
+            raise StoreFault(f"injected GET failure for {key}")
+
+    def on_delete(self, key: str) -> None:
+        if self.fire("store_delete_error"):
+            raise StoreFault(f"injected DELETE failure for {key}")
+
+    # -- DES-time schedules --------------------------------------------------
+    def advance(self, now: float) -> int:
+        """Fire every scheduled event with time <= ``now`` (requires
+        :meth:`bind`). Returns how many fired. Kills of already-dead targets
+        are no-ops, so schedules compose with probabilistic crashes."""
+        fired = 0
+        while self._pending_events and self._pending_events[0][0] <= now:
+            t, kind, target = self._pending_events.pop(0)
+            self._dispatch(kind, target)
+            self.events_fired.append((t, kind, target))
+            self.note("schedule_" + kind)
+            fired += 1
+        return fired
+
+    def _dispatch(self, kind: str, target: Optional[int]) -> None:
+        system = self._system
+        assert system is not None, "FaultPlane.advance requires bind(system)"
+        metadata = system.metadata
+        if kind == "kill_broker":
+            if target not in system._dead:
+                system.fail_broker(target)
+        elif kind == "kill_leader":
+            metadata.fail_replica(metadata.leader_id)
+        elif kind == "kill_replica":
+            if metadata.replicas[target].alive:
+                metadata.fail_replica(target)
+        elif kind == "recover_replica":
+            if not metadata.replicas[target].alive:
+                metadata.recover_replica(target)
+        else:
+            raise ValueError(f"unknown fault-schedule kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Client retry policy (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class RetryPolicy:
+    """Bounded exponential backoff with deterministic jitter.
+
+    ``attempts`` bounds the total tries (first call included); delays follow
+    ``base * multiplier**k`` capped at ``max_delay``, each scaled by a jitter
+    factor drawn uniformly from ``[1-jitter, 1+jitter]`` off the fault
+    plane's seeded RNG — so two retrying clients seeded differently desync
+    (the point of jitter) while a fixed seed replays exactly."""
+
+    attempts: int = 6
+    base_delay: float = 1e-3          # simulated seconds (DES) per first retry
+    multiplier: float = 2.0
+    max_delay: float = 64e-3
+    jitter: float = 0.5
+
+
+@dataclass
+class RetryStats:
+    """What the retry layer actually did (fed into ``OpTally``)."""
+
+    retries: int = 0                  # re-attempts after an Unavailable
+    backoff_time: float = 0.0         # total simulated backoff slept
+    budget_exhausted: int = 0         # RetryBudgetExhausted raised
+
+
+def run_with_retries(fn: Callable[[int], object], policy: RetryPolicy,
+                     rng: random.Random,
+                     stats: Optional[RetryStats] = None,
+                     on_backoff: Optional[Callable[[float], None]] = None,
+                     on_retry: Optional[Callable[[Exception], None]] = None):
+    """Run ``fn(attempt)`` (1-based) until it returns, retrying every
+    :class:`Unavailable` except :class:`RetryBudgetExhausted` itself (a
+    nested retry loop that already gave up must not be multiplied).
+    ``on_backoff`` observes each simulated delay (the DES benchmarks charge
+    it to the op's latency); ``on_retry`` observes the error *before* the
+    backoff (e.g. to fail over a crashed broker)."""
+    delay = policy.base_delay
+    last: Optional[Exception] = None
+    for attempt in range(1, policy.attempts + 1):
+        try:
+            return fn(attempt)
+        except RetryBudgetExhausted:
+            raise
+        except Unavailable as e:
+            last = e
+            if attempt >= policy.attempts:
+                break
+            if on_retry is not None:
+                on_retry(e)
+            pause = min(delay, policy.max_delay)
+            if policy.jitter > 0.0:
+                pause *= 1.0 + policy.jitter * (2.0 * rng.random() - 1.0)
+            if stats is not None:
+                stats.retries += 1
+                stats.backoff_time += pause
+            if on_backoff is not None:
+                on_backoff(pause)
+            delay = min(delay * policy.multiplier, policy.max_delay)
+    if stats is not None:
+        stats.budget_exhausted += 1
+    raise RetryBudgetExhausted(
+        f"gave up after {policy.attempts} attempts: {last}",
+        attempts=policy.attempts, last_error=last)

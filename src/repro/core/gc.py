@@ -79,6 +79,7 @@ class GarbageCollector:
         self.system = system
         self.config = config or GCConfig()
         self._pins: Dict[str, int] = {}   # object id -> pin count
+        self._orphans: set = set()        # crashed-broker PUT carcasses (§15)
         self._stats = GCStats()
 
     # -- pins (session rebase protection, §12/§13) --------------------------
@@ -141,16 +142,32 @@ class GarbageCollector:
         self._propose_and_reap(None, arrival)
         return self.stats()
 
+    def note_orphans(self, object_ids: Iterable[str]) -> None:
+        """Record PUT carcasses from a crashed broker (DESIGN.md §15): keys
+        written (possibly torn) to the store whose metadata proposal never
+        committed. ``resync`` deletes the ones consensus never registered."""
+        self._orphans.update(object_ids)
+
     def resync(self, arrival: Optional[float] = None) -> List[str]:
         """Crash recovery for a reaper that died between the ``gc`` commit
         and the store deletes: re-apply the replicated reclaimed set to the
-        store (idempotent). Run this when a broker restarts."""
+        store (idempotent), and sweep crashed-broker orphan PUTs (§15) —
+        noted keys that consensus never registered (not in ``object_refs``,
+        not already reclaimed) are garbage by definition: no index entry can
+        ever reference them. Run this when a broker restarts."""
         state = self.system.metadata.state
         stale = [obj for obj in sorted(state.reclaimed)
                  if self.system.store.exists(obj)]
+        for b in self.system.brokers:   # live brokers note torn PUTs too
+            self._orphans.update(b.take_orphans())
+        swept = [obj for obj in sorted(self._orphans)
+                 if obj not in state.object_refs
+                 and obj not in state.reclaimed
+                 and self.system.store.exists(obj)]
+        self._orphans.clear()
         self._stats.resyncs += 1
-        self._reap(stale, arrival)
-        return stale
+        self._reap(stale + swept, arrival)
+        return stale + swept
 
     def stats(self) -> GCStats:
         s = self._stats

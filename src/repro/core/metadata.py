@@ -38,6 +38,7 @@ from typing import Deque, Dict, Iterable, List, Optional, Set, Tuple
 
 import numpy as np
 
+from . import errors as _errors
 from .errors import AgileLogError, ForkBlocked, InvalidOperation, UnknownLog
 from .index import NaiveIndex, RunIndex, Span
 from .ltt import EagerTailMap, LazyTailTree
@@ -243,6 +244,19 @@ class MetadataState:
         self.op_seq = 0              # SMR commands applied (age clock)
         self.compact_epoch = 0       # compact commands applied (incl. stale)
         self.compacted_total = 0     # source objects retired by compaction
+        # -- idempotency dedup table (DESIGN.md §15) -----------------------
+        # `idem_results[token]` caches the outcome — ("ok", result) or
+        # ("err", exc_type_name, message) — of the first application of an
+        # `idem`-wrapped command. A client retrying an ambiguous
+        # (committed-but-unacked) propose re-submits the SAME token; the
+        # replay returns the cached outcome instead of applying twice.
+        # Insertion order is consensus order on every replica, so the FIFO
+        # bound (`idem_cap`) evicts identically everywhere; the table is
+        # part of the pickled snapshot state and the convergence digest.
+        self.idem_results: Dict[str, Tuple] = {}
+        self.idem_cap = 1024
+        self.idem_hits = 0           # retried proposals served from the table
+        self.idem_evictions = 0
 
     def __getstate__(self) -> dict:
         # Raft snapshots pickle the whole state machine; the view cache and
@@ -613,6 +627,33 @@ class MetadataState:
         # failure — both apply identically on every replica)
         self.op_seq += 1
         return getattr(self, "_apply_" + op)(*cmd[1:])
+
+    def _apply_idem(self, token: str, cmd: Tuple) -> object:
+        """Exactly-once wrapper (DESIGN.md §15): apply ``cmd`` and cache its
+        outcome under ``token``; a token seen before replays the cached
+        outcome WITHOUT re-applying. Deterministic command errors are cached
+        as values and re-raised equivalently on replay, so a retried
+        ambiguous propose observes the identical result either way."""
+        hit = self.idem_results.get(token)
+        if hit is not None:
+            self.idem_hits += 1
+            if hit[0] == "err":
+                exc_cls = getattr(_errors, hit[1], AgileLogError)
+                raise exc_cls(hit[2])
+            return hit[1]
+        try:
+            result = self.apply(cmd)
+        except AgileLogError as e:
+            self._idem_remember(token, ("err", type(e).__name__, str(e)))
+            raise
+        self._idem_remember(token, ("ok", result))
+        return result
+
+    def _idem_remember(self, token: str, outcome: Tuple) -> None:
+        self.idem_results[token] = outcome
+        while len(self.idem_results) > self.idem_cap:
+            self.idem_results.pop(next(iter(self.idem_results)))
+            self.idem_evictions += 1
 
     def _apply_create_root(self, name: str) -> int:
         log_id = self._next_id

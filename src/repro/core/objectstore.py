@@ -22,6 +22,42 @@ from typing import Dict, Iterable, List, Optional, Tuple
 class ObjectStore:
     """Abstract S3-ish KV-of-bytes interface."""
 
+    #: Optional fault plane (DESIGN.md §15): backends consult it at their
+    #: PUT/GET/DELETE entry points so injected store errors and torn partial
+    #: PUTs exercise every layer above, deterministically.
+    _faults = None
+
+    def attach_faults(self, plane) -> None:
+        self._faults = plane
+
+    def _fault_put(self, key: str, data: bytes) -> bytes:
+        """Consult the fault plane before a PUT. Returns the payload to
+        durably write; raises after the caller-visible prefix of a torn PUT
+        has been handed back (the *caller* of put() sees the error, the
+        store commits whatever the plane let through)."""
+        if self._faults is None:
+            return data
+        payload, error = self._faults.on_put(key, data)
+        if error is not None:
+            if payload is not None:
+                self._commit_put(key, payload)   # the torn prefix lands
+            raise error
+        return data
+
+    def _commit_put(self, key: str, data: bytes) -> None:
+        """Durably write without re-consulting the fault plane (used only
+        for torn-PUT prefixes). Backends that support fault injection
+        override this with their raw write."""
+        raise NotImplementedError
+
+    def _fault_get(self, key: str) -> None:
+        if self._faults is not None:
+            self._faults.on_get(key)
+
+    def _fault_delete(self, key: str) -> None:
+        if self._faults is not None:
+            self._faults.on_delete(key)
+
     def put(self, key: str, data: bytes) -> None:
         raise NotImplementedError
 
@@ -54,13 +90,17 @@ class MemoryObjectStore(ObjectStore):
         self.bytes_read = 0
         self.bytes_deleted = 0
 
-    def put(self, key: str, data: bytes) -> None:
+    def _commit_put(self, key: str, data: bytes) -> None:
         with self._lock:
             self._objects[key] = bytes(data)
             self.put_count += 1
             self.bytes_written += len(data)
 
+    def put(self, key: str, data: bytes) -> None:
+        self._commit_put(key, self._fault_put(key, data))
+
     def get(self, key: str, offset: int = 0, length: Optional[int] = None) -> bytes:
+        self._fault_get(key)
         with self._lock:
             obj = self._objects[key]
             self.get_count += 1
@@ -70,6 +110,7 @@ class MemoryObjectStore(ObjectStore):
             return out
 
     def delete(self, key: str) -> None:
+        self._fault_delete(key)
         with self._lock:
             obj = self._objects.pop(key, None)
             if obj is not None:
@@ -133,13 +174,17 @@ class TieredObjectStore(ObjectStore):
         self.cold_bytes_written = 0  # compressed bytes demotions stored
 
     # -- S3-ish interface ---------------------------------------------------
-    def put(self, key: str, data: bytes) -> None:
+    def _commit_put(self, key: str, data: bytes) -> None:
         with self._lock:
             self._hot[key] = bytes(data)
             self.put_count += 1
             self.bytes_written += len(data)
 
+    def put(self, key: str, data: bytes) -> None:
+        self._commit_put(key, self._fault_put(key, data))
+
     def get(self, key: str, offset: int = 0, length: Optional[int] = None) -> bytes:
+        self._fault_get(key)
         with self._lock:
             obj = self._hot.get(key)
             cold = obj is None
@@ -155,6 +200,7 @@ class TieredObjectStore(ObjectStore):
             return out
 
     def delete(self, key: str) -> None:
+        self._fault_delete(key)
         with self._lock:
             freed = 0
             obj = self._hot.pop(key, None)

@@ -19,7 +19,8 @@ import pickle
 from dataclasses import dataclass
 from typing import Callable, List, Optional, Tuple
 
-from .errors import NotLeader
+from .errors import AmbiguousProposal, NoQuorum, NotLeader, Unavailable
+from .faults import RetryPolicy, RetryStats, run_with_retries
 from .metadata import MetadataState
 
 
@@ -117,6 +118,14 @@ class MetadataService:
         # failover, recovery, and convergence checks. With it off, every
         # replica applies synchronously inside propose() (the seed behavior).
         self.pipeline_apply = pipeline_apply
+        # Fault plane + client retry policy (DESIGN.md §15). With no plane
+        # attached, propose() is the plain synchronous path below — no token
+        # wrapping, no retry loop, byte-identical to the pre-§15 system.
+        self.faults = None
+        self.retry = RetryPolicy()
+        self.retry_stats = RetryStats()
+        self._token_seq = 0
+        self.elections = 0
 
     # -- leadership ------------------------------------------------------------
     @property
@@ -134,14 +143,23 @@ class MetadataService:
         donor = max((p for p in self.replicas if p.alive and p.rid != rid),
                     key=lambda p: p.commit_index)
         if donor.commit_index > r.commit_index:
-            if donor.snapshot is None:
+            # The donor won on commit_index, which says nothing about its
+            # APPLIED state: a pipelined follower (§11) may carry a stale
+            # snapshot from an earlier compaction plus a deferred-apply
+            # backlog — its log is shorter than its commit point. Drain the
+            # backlog and refresh the snapshot so the recovering replica
+            # installs fully-applied state and replays only the (empty)
+            # suffix, instead of re-running the donor's whole backlog.
+            donor.apply_pending()
+            if donor.snapshot is None or donor.snapshot_index < donor.commit_index:
                 donor.take_snapshot()
             r.restore_from(donor)
 
     def _elect(self) -> None:
         alive = [r for r in self.replicas if r.alive]
         if len(alive) * 2 <= len(self.replicas):
-            raise RuntimeError("no quorum: metadata layer unavailable")
+            raise NoQuorum("no quorum: metadata layer unavailable")
+        self.elections += 1
         # most-up-to-date alive replica wins (Raft's log-completeness rule)
         winner = max(alive, key=lambda r: (len(r.log) + r.snapshot_index, -r.rid))
         self.leader_id = winner.rid
@@ -157,9 +175,35 @@ class MetadataService:
     # -- the SMR write path ------------------------------------------------------
     def propose(self, cmd: Tuple, replica_hint: Optional[int] = None) -> object:
         """Sequence `cmd`, commit at majority, apply everywhere, return the
-        leader's apply result (or raise its deterministic error)."""
+        leader's apply result (or raise its deterministic error).
+
+        With a fault plane attached (DESIGN.md §15) this is the full client
+        submit path: the command is wrapped with a fresh idempotency token —
+        deduplicated in the replicated state, so a retry after an ambiguous
+        (committed-but-unacked) outcome applies at most once — and every
+        transient :class:`Unavailable` is retried under the bounded backoff
+        policy. Without a plane it is the plain synchronous path."""
         if replica_hint is not None and replica_hint != self.leader_id:
             raise NotLeader(f"replica {replica_hint} is not the leader")
+        plane = self.faults
+        if plane is None or not plane.enabled:
+            return self._propose_once(cmd)
+        token = f"t{self._token_seq}"
+        self._token_seq += 1
+        wrapped = ("idem", token, cmd)
+        return run_with_retries(lambda _attempt: self._propose_once(wrapped),
+                                self.retry, plane.rng, stats=self.retry_stats)
+
+    def _propose_once(self, cmd: Tuple) -> object:
+        plane = self.faults
+        if plane is not None and plane.fire("leader_crash"):
+            # the leader dies before appending the entry anywhere: nothing
+            # committed. Failing it triggers the election (which may itself
+            # find no quorum); the client retries against the new leader.
+            dead = self.leader_id
+            self.fail_replica(dead)
+            raise Unavailable(
+                f"leader replica {dead} crashed mid-operation (injected)")
         entry = _Entry(self.term, cmd)
         acked = []
         for r in self.replicas:
@@ -171,7 +215,7 @@ class MetadataService:
             # every later proposal after recovery
             for r in acked:
                 r.log.pop()
-            raise RuntimeError("no quorum: append not committed")
+            raise NoQuorum("no quorum: append not committed")
         # global index of the just-appended entry: entries [0..snapshot_index]
         # are compacted, so global = snapshot_index + local_length
         index = self.leader.snapshot_index + len(self.leader.log)
@@ -204,6 +248,14 @@ class MetadataService:
                 if r.alive:
                     r.take_snapshot()
             self._since_snapshot = 0
+        if plane is not None and plane.fire("propose_unacked"):
+            # committed-but-unacked (DESIGN.md §15): the entry is committed
+            # and applied, but the ack is lost. The client may retry ONLY
+            # because the command rides an idempotency token — the replicated
+            # dedup table returns this apply's cached outcome instead of
+            # applying twice.
+            raise AmbiguousProposal(
+                "propose timed out after commit: outcome unacked (injected)")
         if error is not None:
             raise error
         return result
@@ -248,7 +300,25 @@ class MetadataService:
                              sorted(state.object_birth.items()),
                              sorted(state.cold_objects),
                              state.op_seq, state.compact_epoch)
-            return pickle.dumps((items, gc_items, compact_items))
+            # idempotency dedup table (§15): content AND order — insertion
+            # order is consensus order, and it decides future FIFO evictions,
+            # so replicas that agree on entries but not order would diverge
+            # at the next eviction. Each outcome is pickled in ISOLATION:
+            # cached results are live objects that may share identity with
+            # other state on one replica but not another (e.g. after a
+            # snapshot round-trip), and pickle's memoization would turn that
+            # invisible identity difference into a digest mismatch.
+            idem_items = tuple((tok, pickle.dumps(outcome))
+                               for tok, outcome in state.idem_results.items())
+            # The same isolation applies to the digest as a whole: two logs
+            # on one replica may share a tails tuple or index-run object that
+            # a snapshot-restored peer reconstructs as distinct (equal)
+            # objects, so each component is pickled separately and the digest
+            # is built from the independent byte strings.
+            return pickle.dumps((tuple(pickle.dumps(it) for it in items),
+                                 tuple(pickle.dumps(it) for it in gc_items),
+                                 tuple(pickle.dumps(it) for it in compact_items),
+                                 idem_items))
 
         blobs = set()
         for r in self.replicas:

@@ -131,6 +131,10 @@ class OpTally:
     bytes_get_cold: int = 0   # logical bytes those cold GETs returned (§14)
     cold_demotions: int = 0   # hot->cold tier moves (§14)
     bytes_demoted: int = 0    # compressed bytes demotions stored cold (§14)
+    retries: int = 0          # client retry attempts after Unavailable (§15)
+    faults_injected: int = 0  # fault-plane draws that fired (§15)
+    dedup_hits: int = 0       # idempotent re-proposals deduplicated (§15)
+    failovers: int = 0        # broker failovers + leader elections (§15)
 
     @classmethod
     def capture(cls, system, records: int = 0) -> "OpTally":
@@ -156,7 +160,14 @@ class OpTally:
                    cold_gets=getattr(system.store, "cold_gets", 0),
                    bytes_get_cold=getattr(system.store, "cold_bytes_read", 0),
                    cold_demotions=getattr(system.store, "cold_puts", 0),
-                   bytes_demoted=getattr(system.store, "cold_bytes_written", 0))
+                   bytes_demoted=getattr(system.store, "cold_bytes_written", 0),
+                   retries=getattr(getattr(system, "retry_stats", None),
+                                   "retries", 0),
+                   faults_injected=getattr(getattr(system, "faults", None),
+                                           "total_injected", 0) or 0,
+                   dedup_hits=getattr(system.metadata.state, "idem_hits", 0),
+                   failovers=(getattr(system, "broker_failovers", 0)
+                              + getattr(system.metadata, "elections", 0)))
 
     def delta(self, since: "OpTally") -> "OpTally":
         return OpTally(records=self.records - since.records,
@@ -176,7 +187,11 @@ class OpTally:
                        cold_gets=self.cold_gets - since.cold_gets,
                        bytes_get_cold=self.bytes_get_cold - since.bytes_get_cold,
                        cold_demotions=self.cold_demotions - since.cold_demotions,
-                       bytes_demoted=self.bytes_demoted - since.bytes_demoted)
+                       bytes_demoted=self.bytes_demoted - since.bytes_demoted,
+                       retries=self.retries - since.retries,
+                       faults_injected=self.faults_injected - since.faults_injected,
+                       dedup_hits=self.dedup_hits - since.dedup_hits,
+                       failovers=self.failovers - since.failovers)
 
     @property
     def proposals_per_record(self) -> float:

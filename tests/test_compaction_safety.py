@@ -30,9 +30,9 @@ import random
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (BoltSystem, CompactionConfig, GroupCommitConfig,
-                        TieredObjectStore, TieringConfig)
-from repro.core.errors import AgileLogError
+from repro.core import (BoltSystem, CompactionConfig, FaultConfig,
+                        GroupCommitConfig, TieredObjectStore, TieringConfig)
+from repro.core.errors import AgileLogError, StoreFault
 from repro.core.objectstore import MemoryObjectStore
 from repro.core.oracle import (check_manifest_audit, check_storage_liveness,
                                check_storage_safety, live_byte_union,
@@ -287,6 +287,36 @@ def test_crash_after_put_before_swap_orphan_swept_by_resync():
     assert root.read(0, root.tail) == before
     check_storage_liveness(system, max_byte_amplification=RESIDUAL_AMP)
     assert system.compact_stats.orphans_swept == 1
+
+
+def test_injected_torn_cmp_put_swept_by_compactor_resync():
+    """§15 x §14: the compactor's cmp-* PUT tears (injected prefix write +
+    StoreFault) before the swap proposal — the carcass key is unknown to
+    consensus, reads stay on the sources, and after healing the compactor's
+    resync sweeps it and a re-run compacts cleanly."""
+    system = BoltSystem(group_commit=GroupCommitConfig(max_records=10_000),
+                        faults=FaultConfig(seed=29))
+    root = system.create_log("r")
+    root.append(b"base").wait()
+    _churn_multi_log(system, root, rounds=2)
+    before = root.read(0, root.tail)
+    system.faults.config.store_put_torn = 1.0   # arm ONLY the cmp-* PUT
+    with pytest.raises(StoreFault):
+        system.compact_quantum()
+    system.faults.config.store_put_torn = 0.0
+    carcasses = [k for k in system.store.list("cmp-")
+                 if k not in system.metadata.state.object_refs]
+    assert carcasses                            # the torn prefix landed
+    assert root.read(0, root.tail) == before    # reads never left the sources
+    check_storage_safety(system)
+    system.faults.heal()
+    swept = system.compactor.resync()
+    assert sorted(swept) == sorted(carcasses)
+    system.compact()                            # restarted compactor works
+    system.gc()
+    assert root.read(0, root.tail) == before
+    check_storage_liveness(system, max_byte_amplification=RESIDUAL_AMP)
+    assert system.metadata.check_convergence()
 
 
 def test_crash_after_swap_before_reap_sources_reclaimed_on_next_quantum():

@@ -23,9 +23,9 @@ import random
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (BoltSystem, ForkBlocked, GCConfig, GroupCommitConfig,
-                        InvalidOperation)
-from repro.core.errors import AgileLogError
+from repro.core import (BoltSystem, FaultConfig, ForkBlocked, GCConfig,
+                        GroupCommitConfig, InvalidOperation)
+from repro.core.errors import AgileLogError, StoreFault
 from repro.core.oracle import (OracleModel, check_manifest_audit,
                                check_storage_liveness, check_storage_safety,
                                recount_object_refs)
@@ -494,6 +494,48 @@ def test_reaper_crash_mid_reap_resync_converges_store():
     recovered = system.collector.resync()
     assert sorted(recovered) == sorted(lingering)
     check_storage_liveness(system)
+    assert system.metadata.check_convergence()
+
+
+def test_injected_delete_fault_mid_reap_heals_via_resync():
+    """§15 x §13: a reaper whose store DELETEs fail mid-reap (injected, not
+    hand-rolled) leaves already-reclaimed objects behind; after the plane
+    heals, resync() replays reclaimed ∩ store and the store converges."""
+    system = BoltSystem(n_brokers=3,
+                        faults=FaultConfig(seed=41, store_delete_error=1.0))
+    root = system.create_log("r")
+    root.append(b"keep")
+    _churn(root, 6)
+    with pytest.raises(StoreFault):
+        system.gc()                           # consensus committed, reap died
+    state = system.metadata.state
+    lingering = [o for o in state.reclaimed if system.store.exists(o)]
+    assert lingering                          # the reaper really did die early
+    check_storage_safety(system)              # fault plane never risks safety
+    system.faults.heal()
+    recovered = system.collector.resync()
+    assert sorted(recovered) == sorted(lingering)
+    check_storage_liveness(system)
+    assert system.metadata.check_convergence()
+    assert root.read(0, 1) == [b"keep"]
+
+
+def test_injected_torn_put_carcass_swept_by_resync():
+    """§15 x §13: a torn segment PUT (prefix durably written, error raised)
+    retries under a FRESH object id; the carcass key — never registered by
+    consensus — is noted by the broker and swept by the reaper's resync."""
+    system = BoltSystem(n_brokers=2,
+                        faults=FaultConfig(seed=13, store_put_torn=0.25))
+    root = system.create_log("r")
+    for i in range(40):
+        root.append(b"r%d" % i)
+    assert system.faults.counters.get("store_put_torn", 0) > 0
+    assert root.read(0, 40) == [b"r%d" % i for i in range(40)]
+    swept = system.collector.resync()
+    assert swept                              # carcasses existed and are gone
+    for key in swept:
+        assert not system.store.exists(key)
+    check_storage_liveness(system)            # no amplification left behind
     assert system.metadata.check_convergence()
 
 

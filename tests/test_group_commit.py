@@ -11,7 +11,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (AgileLogError, BoltSystem, ForkBlocked,
-                        GroupCommitConfig)
+                        GroupCommitConfig, NoLiveBrokers, NoQuorum)
 from repro.core.metadata import MetadataState
 from repro.core.objectstore import SegmentWriter
 from repro.core.sim import OpTally
@@ -130,14 +130,30 @@ def test_metadata_ops_flush_staged_records():
     assert fork.read(0, fork.tail) == [b"a", b"b"]
 
 
-def test_failed_broker_discards_staging():
+def test_failed_broker_staging_fails_over():
+    """DESIGN.md §15: a dead broker's unacked staging moves to a surviving
+    broker; the receipt resolves with the surviving positions — nothing
+    acked is lost, nothing unacked is dropped."""
     system = BoltSystem(group_commit=GroupCommitConfig(max_records=100))
     log = system.create_log("x")
-    p = log.append(b"lost")
+    p = log.append(b"moved")
     system.fail_broker(0)
-    with pytest.raises(AgileLogError):
+    assert system.broker_failovers == 1
+    assert p.positions() == [0]              # committed via the adopter
+    assert system.metadata.state.tail(log.log_id) == 1
+    assert log.read(0, 1) == [b"moved"]
+
+
+def test_failed_broker_no_live_peer_fails_staging():
+    """With NO survivor to adopt the staging, the unacked records are lost —
+    each pending FAILS with NoLiveBrokers instead of resolving."""
+    system = BoltSystem(n_brokers=2, group_commit=GroupCommitConfig(max_records=100))
+    log = system.create_log("x")
+    p = log.append(b"lost")
+    system.fail_broker(1)
+    system.fail_broker(0)
+    with pytest.raises(NoLiveBrokers):
         p.wait()                             # never acked -> failed, not committed
-    system.flush()
     assert system.metadata.state.tail(log.log_id) == 0
 
 
@@ -150,7 +166,7 @@ def test_flush_failure_fails_pendings_and_recovers():
     p = log.append(b"r")
     system.metadata.fail_replica(1)
     system.metadata.fail_replica(2)
-    with pytest.raises(RuntimeError):
+    with pytest.raises(NoQuorum):
         system.flush()
     with pytest.raises(AgileLogError):
         p.wait()

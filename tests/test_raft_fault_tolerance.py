@@ -3,7 +3,7 @@
 import pytest
 
 from repro.core import BoltSystem
-from repro.core.errors import AgileLogError
+from repro.core.errors import AgileLogError, NoQuorum, Unavailable
 
 
 def _fill(log, n, prefix=b"r"):
@@ -39,8 +39,9 @@ def test_no_quorum_rejects_writes():
     log = sys.create_log("root")
     sys.metadata.fail_replica(1)
     log.append(b"ok-with-2-of-3")
-    with pytest.raises(RuntimeError):
+    with pytest.raises(NoQuorum):
         sys.metadata.fail_replica(sys.metadata.leader_id)  # second failure: no quorum
+    assert isinstance(NoQuorum("x"), Unavailable)          # typed as retryable (§15)
 
 
 def test_no_quorum_proposal_rolls_back_and_recovers():
@@ -50,7 +51,7 @@ def test_no_quorum_proposal_rolls_back_and_recovers():
     log = sys.create_log("root")
     sys.metadata.fail_replica(1)
     sys.metadata.fail_replica(2)
-    with pytest.raises(RuntimeError):
+    with pytest.raises(NoQuorum):
         log.append(b"never-committed")
     sys.metadata.recover_replica(1)
     assert log.append(b"first-real").position() == 0
@@ -69,6 +70,35 @@ def test_replica_recovery_from_snapshot():
     # recovered replica converges (snapshot install + suffix replay)
     r = sys.metadata.replicas[victim]
     assert r.state.tail(log.log_id) == 50
+    assert sys.metadata.check_convergence()
+
+
+def test_recovery_from_donor_with_stale_snapshot_and_backlog():
+    """Regression (§15): the recovery donor is picked by commit_index, but a
+    pipelined follower (§11) can be ahead on commit_index while carrying a
+    STALE snapshot plus a deferred-apply backlog — its log is shorter than
+    its commit point says. recover_replica must drain the donor's backlog
+    and refresh its snapshot before handing state over, or the recovering
+    replica would install old state and replay an incomplete suffix."""
+    sys = BoltSystem(n_brokers=2, n_meta_replicas=3, snapshot_every=5,
+                     pipeline_apply=True)
+    log = sys.create_log("root")
+    _fill(log, 12)                      # several snapshot rounds
+    victim = (sys.metadata.leader_id + 1) % 3
+    sys.metadata.fail_replica(victim)
+    _fill(log, 12)                      # progress while the replica is down
+    # pick the donor the way recover_replica does, and make it maximally
+    # awkward: a non-leader follower whose snapshot predates its commit point
+    donor = max((p for p in sys.metadata.replicas
+                 if p.alive and p.rid != victim),
+                key=lambda p: p.commit_index)
+    if donor.rid != sys.metadata.leader_id:
+        assert donor.snapshot_index < donor.commit_index
+    sys.metadata.recover_replica(victim)
+    r = sys.metadata.replicas[victim]
+    assert donor.pending_applies == 0          # backlog drained pre-handover
+    assert r.snapshot_index == donor.snapshot_index
+    assert r.state.tail(log.log_id) == 24
     assert sys.metadata.check_convergence()
 
 
