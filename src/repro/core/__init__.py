@@ -14,7 +14,11 @@ Layers (bottom-up):
                 compressed store class (DESIGN.md §14)
   faults      — deterministic fault-injection plane + client retry policy
                 (seeded per-site probabilities, DES-time kill/recover
-                schedules, bounded backoff — DESIGN.md §15)
+                schedules, bounded backoff — DESIGN.md §15) + the message-
+                level network layer (drop/delay/duplicate/reorder, partitions
+                — DESIGN.md §16)
+  linearize   — general porcupine-style linearizability checker over
+                recorded append/read histories (DESIGN.md §16)
   api         — the agent-session client API (receipts, speculation sessions,
                 tailing subscriptions — DESIGN.md §12) + BoltSystem wiring
   sim         — deterministic DES used by isolation benchmarks
@@ -27,10 +31,11 @@ from .compact import (CompactionConfig, Compactor, CompactStats, TieringConfig,
                       TierManager, TierStats)
 from .errors import (AgileLogError, AmbiguousProposal, BrokerCrashed,
                      ConflictError, ForkBlocked, InvalidOperation,
-                     NoLiveBrokers, NoQuorum, RetryBudgetExhausted, StoreFault,
-                     Unavailable, UnknownLog)
-from .faults import FaultConfig, FaultPlane, RetryPolicy, RetryStats
+                     LeaseExpired, NoLiveBrokers, NoQuorum, NotLeader,
+                     RetryBudgetExhausted, StoreFault, Unavailable, UnknownLog)
+from .faults import FaultConfig, FaultPlane, LinkFaults, RetryPolicy, RetryStats
 from .gc import GarbageCollector, GCConfig, GCStats
+from .linearize import History, LinearizeResult, check_log
 from .objectstore import TieredObjectStore
 
 __all__ = [
@@ -38,9 +43,11 @@ __all__ = [
     "Subscription", "GroupCommitConfig", "GarbageCollector", "GCConfig",
     "GCStats", "CompactionConfig", "Compactor", "CompactStats",
     "TieringConfig", "TierManager", "TierStats", "TieredObjectStore",
-    "FaultConfig", "FaultPlane", "RetryPolicy", "RetryStats",
+    "FaultConfig", "FaultPlane", "LinkFaults", "RetryPolicy", "RetryStats",
+    "History", "LinearizeResult", "check_log",
     "AgileLogError", "ConflictError", "ForkBlocked",
     "InvalidOperation", "UnknownLog",
-    "Unavailable", "NoQuorum", "NoLiveBrokers", "StoreFault",
-    "BrokerCrashed", "AmbiguousProposal", "RetryBudgetExhausted",
+    "Unavailable", "NoQuorum", "NotLeader", "LeaseExpired", "NoLiveBrokers",
+    "StoreFault", "BrokerCrashed", "AmbiguousProposal",
+    "RetryBudgetExhausted",
 ]

@@ -818,6 +818,24 @@ class BoltSystem:
         were already handed to the §13 reaper at failure time."""
         self._dead.discard(broker_id)
 
+    # -- network partitions (DESIGN.md §16) --------------------------------
+    def partition(self, *groups) -> None:
+        """Partition the metadata replica network into ``groups`` (iterables
+        of replica ids): traffic crosses group boundaries in neither
+        direction until :meth:`heal_network`. Convenience front for
+        ``faults.net.partition`` — requires a fault plane."""
+        assert self.faults is not None, "partition() needs a fault plane"
+        self.faults.net.partition(*groups)
+
+    def heal_network(self) -> None:
+        """Lift every partition (symmetric and one-way) and deliver delayed
+        in-flight messages; replica reconciliation then happens through
+        normal AppendEntries traffic (``sync_followers`` / the next
+        ``check_convergence``)."""
+        assert self.faults is not None, "heal_network() needs a fault plane"
+        self.faults.net.heal()
+        self.faults.net.flush()
+
     def live_broker(self, preferred: Broker) -> Broker:
         if preferred.broker_id not in self._dead:
             return preferred

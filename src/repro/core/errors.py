@@ -41,10 +41,6 @@ class ConflictError(AgileLogError):
         self.holds_epoch = holds_epoch  # metadata holds_version at the check
 
 
-class NotLeader(AgileLogError):
-    """Metadata proposal sent to a non-leader replica."""
-
-
 class Unavailable(AgileLogError):
     """A layer of the system cannot serve the request *right now* (DESIGN.md
     §15). Unlike the deterministic command errors above, unavailability is
@@ -56,6 +52,24 @@ class Unavailable(AgileLogError):
 class NoQuorum(Unavailable):
     """The metadata layer lost its majority: proposals cannot commit and a
     leader cannot be elected until enough replicas recover."""
+
+
+class NotLeader(Unavailable):
+    """Metadata proposal handled by a replica that is not (or no longer) the
+    leader (DESIGN.md §16). Under the message-level network plane this is the
+    term fence: a partitioned stale leader's AppendEntries are rejected by the
+    higher term of the majority-side quorum, so its proposals raise this
+    instead of acking. Retryable — the client's :class:`RetryPolicy` fails
+    over to the current leader."""
+
+
+class LeaseExpired(Unavailable):
+    """A lease-fenced local read was attempted on a replica whose leader
+    lease has lapsed (DESIGN.md §16). A partitioned stale leader stops
+    winning majority ack rounds, its lease stops being extended, and once the
+    DES clock passes the lease horizon its local reads are fenced — they
+    raise this instead of returning stale state. Retryable: the client fails
+    over and re-reads through the current leader."""
 
 
 class NoLiveBrokers(Unavailable):

@@ -655,6 +655,14 @@ class MetadataState:
             self.idem_results.pop(next(iter(self.idem_results)))
             self.idem_evictions += 1
 
+    def _apply_noop(self) -> None:
+        """Current-term barrier entry (DESIGN.md §16): a new leader proposes
+        one of these to commit any lingering prior-term suffix under raft's
+        commit rule (prior-term entries commit only beneath a current-term
+        majority ack). State-machine-wise it only ticks the age clock — which
+        ``apply`` already did."""
+        return None
+
     def _apply_create_root(self, name: str) -> int:
         log_id = self._next_id
         self._next_id += 1

@@ -102,6 +102,14 @@ class SpecStats:
     replayed_records: int = 0  # suffix records re-sequenced by rebases
 
 
+def _fault_count(system, key: str) -> int:
+    """Read one fault-plane counter off a system (0 without a plane)."""
+    plane = getattr(system, "faults", None)
+    if plane is None:
+        return 0
+    return plane.counters.get(key, 0)
+
+
 @dataclass
 class OpTally:
     """Cross-plane operation counters for amortization accounting (DESIGN.md §9).
@@ -135,6 +143,10 @@ class OpTally:
     faults_injected: int = 0  # fault-plane draws that fired (§15)
     dedup_hits: int = 0       # idempotent re-proposals deduplicated (§15)
     failovers: int = 0        # broker failovers + leader elections (§15)
+    msgs_dropped: int = 0     # consensus messages the network lost (§16)
+    msgs_delayed: int = 0     # consensus messages held for later delivery (§16)
+    msgs_duplicated: int = 0  # consensus messages delivered twice (§16)
+    fenced_rejections: int = 0  # stale-term appends/reads fenced (§16)
 
     @classmethod
     def capture(cls, system, records: int = 0) -> "OpTally":
@@ -167,7 +179,11 @@ class OpTally:
                                            "total_injected", 0) or 0,
                    dedup_hits=getattr(system.metadata.state, "idem_hits", 0),
                    failovers=(getattr(system, "broker_failovers", 0)
-                              + getattr(system.metadata, "elections", 0)))
+                              + getattr(system.metadata, "elections", 0)),
+                   msgs_dropped=_fault_count(system, "msgs_dropped"),
+                   msgs_delayed=_fault_count(system, "msgs_delayed"),
+                   msgs_duplicated=_fault_count(system, "msgs_duplicated"),
+                   fenced_rejections=_fault_count(system, "fenced_rejections"))
 
     def delta(self, since: "OpTally") -> "OpTally":
         return OpTally(records=self.records - since.records,
@@ -191,7 +207,12 @@ class OpTally:
                        retries=self.retries - since.retries,
                        faults_injected=self.faults_injected - since.faults_injected,
                        dedup_hits=self.dedup_hits - since.dedup_hits,
-                       failovers=self.failovers - since.failovers)
+                       failovers=self.failovers - since.failovers,
+                       msgs_dropped=self.msgs_dropped - since.msgs_dropped,
+                       msgs_delayed=self.msgs_delayed - since.msgs_delayed,
+                       msgs_duplicated=self.msgs_duplicated - since.msgs_duplicated,
+                       fenced_rejections=(self.fenced_rejections
+                                          - since.fenced_rejections))
 
     @property
     def proposals_per_record(self) -> float:

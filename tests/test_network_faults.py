@@ -1,0 +1,294 @@
+"""Message-level network fault plane + term-fenced leadership (DESIGN.md §16).
+
+Directed tests for the tentpole mechanisms: symmetric/asymmetric partitions
+over the replication traffic, majority-side election progress, stale-leader
+term fencing (``NotLeader``), lease-fenced local reads (``LeaseExpired``),
+divergent-suffix reconciliation on heal, per-link fault overrides, duplicate/
+reorder absorption, the same-seed replay guarantee for message faults, and
+the ``advance()`` same-timestamp tiebreak regression (ISSUE 8 satellite).
+"""
+
+import pytest
+
+from repro.core import (BoltSystem, FaultConfig, FaultPlane, LinkFaults,
+                        RetryPolicy)
+from repro.core.errors import (LeaseExpired, NoQuorum, NotLeader,
+                               RetryBudgetExhausted, Unavailable)
+from repro.core.raft import MetadataService
+
+
+def make_meta(n=5, attempts=8, **cfg_kwargs):
+    """A standalone metadata group with a §16 plane attached."""
+    plane = FaultPlane(FaultConfig(**cfg_kwargs))
+    meta = MetadataService(n_replicas=n)
+    meta.faults = plane
+    meta.retry = RetryPolicy(attempts=attempts)
+    return meta, plane
+
+
+# ---------------------------------------------------------------------------
+# message mode with a perfect network == direct mode
+# ---------------------------------------------------------------------------
+
+def test_zero_fault_message_mode_matches_direct():
+    """A plane with no armed faults routes replication through messages, yet
+    the observable outcome is identical to the direct path."""
+    direct = MetadataService(n_replicas=5)
+    msg, _plane = make_meta(5)
+    for meta in (direct, msg):
+        root = meta.propose(("create_root", "r"))
+        for i in range(20):
+            meta.propose(("append", root, f"o{i}", (0,), (4,)))
+        meta.fail_replica(meta.leader_id)          # failover mid-stream
+        for i in range(20, 30):
+            meta.propose(("append", root, f"o{i}", (0,), (4,)))
+        assert meta.state.tail(root) == 30
+        assert meta.check_convergence()
+    assert direct.leader_id == msg.leader_id
+    assert direct.proposals == msg.proposals
+
+
+# ---------------------------------------------------------------------------
+# partitions: majority progress, stale-leader fencing, reconciliation
+# ---------------------------------------------------------------------------
+
+def test_minority_partition_majority_side_elects_and_serves():
+    meta, plane = make_meta(5)
+    root = meta.propose(("create_root", "r"))
+    old = meta.leader_id
+    plane.net.partition([0, 1], [2, 3, 4])         # leader 0 on the minority
+    pos = meta.propose(("append", root, "p0", (0,), (4,)))
+    assert pos == [0]                              # the client was served
+    assert meta.leader_id in {2, 3, 4}             # by a majority-side leader
+    assert meta.replicas[old].is_leader            # 0 has not learned yet
+    assert meta.replicas[meta.leader_id].is_leader
+    assert meta.state.tail(root) == 1
+
+
+def test_stale_leader_is_term_fenced_after_heal():
+    meta, plane = make_meta(5)
+    root = meta.propose(("create_root", "r"))
+    old = meta.leader_id
+    plane.net.partition([0, 1], [2, 3, 4])
+    meta.propose(("append", root, "p0", (0,), (4,)))   # elects on {2,3,4}
+    # while partitioned the deposed leader cannot commit: no majority, and
+    # no replica it can reach fences it either — it just fails
+    with pytest.raises((NoQuorum, RetryBudgetExhausted)):
+        meta.propose_via(old, ("append", root, "stale", (0,), (4,)))
+    assert meta.replicas[old].is_leader            # still believes
+    plane.net.heal()
+    # healed: its stale term now reaches replicas that adopted a higher one
+    with pytest.raises(NotLeader):
+        meta.propose_via(old, ("append", root, "stale2", (0,), (4,)))
+    assert not meta.replicas[old].is_leader        # deposition observed
+    assert plane.counters.get("fenced_rejections", 0) > 0
+    # nothing the stale leader tried ever committed
+    assert meta.check_convergence()
+    assert meta.state.tail(root) == 1
+
+
+def test_divergent_minority_suffix_truncated_on_heal():
+    meta, plane = make_meta(5)
+    root = meta.propose(("create_root", "r"))
+    old = meta.leader_id
+    plane.net.partition([0, 1], [2, 3, 4])
+    # several failed attempts leave lingering uncommitted entries on {0, 1}
+    for i in range(3):
+        with pytest.raises((NoQuorum, RetryBudgetExhausted, Unavailable)):
+            meta.propose_via(old, ("append", root, f"junk{i}", (0,), (4,)))
+    junk_len = meta.replicas[old].last_index
+    # the majority side commits real entries at the same indices
+    for i in range(5):
+        meta.propose(("append", root, f"real{i}", (0,), (4,)))
+    assert meta.replicas[old].last_index == junk_len   # divergence is real
+    plane.net.heal()
+    assert meta.check_convergence()                # reconciliation ran
+    leader = meta.leader
+    for r in meta.replicas:
+        assert r.last_index == leader.last_index
+        assert [e.cmd for e in r.log] == [e.cmd for e in leader.log]
+    assert meta.state.tail(root) == 5              # junk never surfaced
+
+
+def test_lease_fenced_read_expires_for_deposed_leader():
+    meta, plane = make_meta(5)
+    root = meta.propose(("create_root", "r"))
+    old = meta.leader_id
+    plane.net.partition([0, 1], [2, 3, 4])
+    meta.propose(("append", root, "p0", (0,), (4,)))   # fails over
+    new = meta.leader_id
+    # the new leader's lease was granted by its commit round at now=0
+    assert meta.read_fenced(new).tail(root) == 1
+    # advance the DES clock past the stale leader's lease horizon
+    plane.advance(meta.replicas[old].lease_until + 0.01)
+    with pytest.raises(LeaseExpired):
+        meta.read_fenced(old)
+    # a committing leader keeps extending its lease
+    meta.propose(("append", root, "p1", (0,), (4,)))
+    assert meta.read_fenced(new).tail(root) == 2
+    # a replica that never led rejects locally
+    follower = next(r.rid for r in meta.replicas
+                    if r.rid not in (old, new))
+    with pytest.raises(NotLeader):
+        meta.read_fenced(follower)
+
+
+def test_asymmetric_partition_loses_acks_not_requests():
+    meta, plane = make_meta(3)
+    root = meta.propose(("create_root", "r"))
+    plane.net.partition_oneway([1], [0])           # 1's replies to 0 vanish
+    for i in range(6):
+        meta.propose(("append", root, f"o{i}", (0,), (4,)))
+    # follower 1 RECEIVED the entries (request leg delivers) but its acks
+    # died, so the leader committed through follower 2
+    assert meta.replicas[1].last_index == meta.leader.last_index
+    assert plane.counters.get("msgs_partitioned", 0) > 0
+    plane.net.heal()
+    assert meta.check_convergence()
+    assert meta.state.tail(root) == 6
+
+
+# ---------------------------------------------------------------------------
+# probabilistic link faults
+# ---------------------------------------------------------------------------
+
+def test_per_link_fault_override_flapping_link():
+    cfg = dict(link_faults={(0, 1): LinkFaults(drop=1.0)})
+    meta, plane = make_meta(3, **cfg)
+    root = meta.propose(("create_root", "r"))
+    for i in range(8):
+        meta.propose(("append", root, f"o{i}", (0,), (4,)))
+    # the 0->1 link is dead, yet every propose committed via follower 2
+    assert meta.state.tail(root) == 8
+    assert plane.counters["msgs_dropped"] >= 8
+    assert meta.replicas[1].last_index < meta.leader.last_index
+    plane.heal()                                    # disarm + drain
+    assert meta.check_convergence()                 # reconciliation catches 1 up
+    assert meta.replicas[1].last_index == meta.leader.last_index
+
+
+def test_drop_delay_duplicate_reorder_absorbed_exactly_once():
+    meta, plane = make_meta(5, attempts=10, seed=77, net_drop=0.15,
+                            net_delay=0.10, net_duplicate=0.10,
+                            net_reorder=0.10)
+    root = meta.propose(("create_root", "r"))
+    committed = []
+    for i in range(40):
+        plane.advance(plane.now + 1e-3)            # pump delayed messages
+        try:
+            meta.propose(("append", root, f"o{i}", (0,), (4,)))
+        except Unavailable:
+            pass                                   # at-most-once: may land
+        else:
+            committed.append(i)
+    assert committed                               # the group made progress
+    for site in ("msgs_dropped", "msgs_delayed", "msgs_duplicated",
+                 "msgs_reordered"):
+        assert plane.counters.get(site, 0) > 0, site
+    plane.heal()
+    assert meta.check_convergence()
+    # exactly-once for resolved proposals, at-most-once for unknown ones
+    tail = meta.state.tail(root)
+    assert len(committed) <= tail <= 40
+
+
+def test_same_seed_replays_identical_message_fault_sequence():
+    def run(seed):
+        meta, plane = make_meta(5, attempts=6, seed=seed, net_drop=0.2,
+                                net_delay=0.1, net_duplicate=0.05,
+                                net_reorder=0.05)
+        root = meta.propose(("create_root", "r"))
+        for i in range(30):
+            plane.advance(plane.now + 1e-3)
+            try:
+                meta.propose(("append", root, f"o{i}", (0,), (4,)))
+            except Unavailable:
+                pass
+        return (dict(plane.counters), meta.retry_stats.retries,
+                meta.term, meta.state.tail(root))
+
+    assert run(42) == run(42)
+    assert run(42) != run(43)
+
+
+# ---------------------------------------------------------------------------
+# DES schedules: partitions over time + the tiebreak regression
+# ---------------------------------------------------------------------------
+
+def test_scheduled_partition_and_heal_end_to_end():
+    cfg = FaultConfig(seed=21,
+                      schedule=((0.3, "partition", ((0, 1), (2, 3, 4))),
+                                (0.7, "heal_network", None)))
+    system = BoltSystem(n_brokers=2, n_meta_replicas=5, faults=cfg,
+                        retry=RetryPolicy(attempts=10))
+    log = system.create_log("events")
+    want = []
+    for i in range(100):
+        system.faults.advance(i / 100.0)
+        rec = b"ev-%03d" % i
+        log.append(rec)
+        want.append(rec)
+    system.flush()
+    assert system.metadata.elections >= 1          # the partition forced one
+    assert system.metadata.leader_id in {2, 3, 4}
+    system.faults.heal()
+    assert log.read(0, 100) == want                # all acked, none lost,
+    assert system.metadata.state.tail(log.log_id) == 100   # none duplicated
+    assert system.metadata.check_convergence()
+
+
+def test_advance_tiebreak_same_timestamp_fires_in_schedule_order():
+    """ISSUE 8 satellite: same-timestamp events with mutually incomparable
+    targets (tuple / None / int) must fire in original schedule order — the
+    pre-fix sort over raw triples was a TypeError on this schedule."""
+    sched = ((0.2, "partition", ((0, 1), (2, 3, 4))),
+             (0.2, "heal_network", None),
+             (0.2, "kill_replica", 4),
+             (0.2, "recover_replica", 4))
+    cfg = FaultConfig(seed=5, schedule=sched)
+    system = BoltSystem(n_meta_replicas=5, faults=cfg)
+    fired = system.faults.advance(1.0)
+    assert fired == 4
+    assert system.faults.events_fired == list(sched)
+    # order mattered: partition healed BEFORE the kill/recover pair ran,
+    # and the kill fired before the recover (replica 4 is back up)
+    assert not system.faults.net.blocked(0, 2)
+    assert system.metadata.replicas[4].alive
+
+    def run():
+        s = BoltSystem(n_meta_replicas=5, faults=FaultConfig(
+            seed=5, schedule=sched, net_drop=0.1))
+        s.faults.advance(1.0)
+        log = s.create_log("r")
+        for i in range(10):
+            log.append(b"x%d" % i)
+        return (s.faults.events_fired, dict(s.faults.counters))
+
+    assert run() == run()                          # same-seed replay holds
+
+
+def test_partition_events_need_no_bound_system():
+    plane = FaultPlane(FaultConfig(
+        schedule=((0.1, "partition", ((0,), (1, 2))),
+                  (0.2, "heal_network", None))))
+    assert plane.advance(0.15) == 1                # partition fired unbound
+    assert plane.net.blocked(0, 1)
+    assert plane.advance(0.25) == 1
+    assert not plane.net.blocked(0, 1)
+    # kill/recover kinds still demand bind() (seed behavior, §15)
+    with pytest.raises(AssertionError):
+        FaultPlane(FaultConfig(
+            schedule=((0.1, "kill_broker", 0),))).advance(1.0)
+
+
+def test_bolt_system_partition_helpers():
+    system = BoltSystem(n_meta_replicas=5, faults=True,
+                        retry=RetryPolicy(attempts=8))
+    log = system.create_log("r")
+    log.append(b"before")
+    system.partition([0, 1], [2, 3, 4])
+    log.append(b"during")                          # majority side serves
+    system.heal_network()
+    log.append(b"after")
+    assert log.read(0, 3) == [b"before", b"during", b"after"]
+    assert system.metadata.check_convergence()
