@@ -28,6 +28,7 @@ from .bench_meta import bench_meta
 from .bench_pipeline import bench_pipeline
 from .bench_read import bench_read
 from .bench_roofline import bench_roofline
+from .bench_serve import bench_serve
 
 ALL = [
     ("fig5_fork_latency", bench_fork_latency),
@@ -47,6 +48,7 @@ ALL = [
     ("chaos_availability", bench_chaos),
     ("data_pipeline", bench_pipeline),
     ("roofline", bench_roofline),
+    ("serving", bench_serve),
 ]
 
 

@@ -1,5 +1,7 @@
-"""Batched serving: requests stream in through the log, decode runs with a KV
-cache, responses stream back out — the serving-side end-to-end driver.
+"""Serving ON the log (DESIGN.md §17): requests stream in through a
+subscription, a batched engine decodes and appends per-token response records
+the subscribers demux, and a speculative decoder runs each draft rollout as a
+``log.speculate()`` session — byte-identical to sequential greedy decode.
 
     PYTHONPATH=src python examples/serve.py
 """
@@ -7,59 +9,66 @@ cache, responses stream back out — the serving-side end-to-end driver.
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import BoltSystem
 from repro.models.config import ModelConfig
-from repro.models.lm import decode_step, forward, init_caches, init_params
-from repro.streams import Consumer, Producer, Topic
+from repro.models.lm import init_params
+from repro.serve import (ModelDraft, ModelTarget, ServeEngine,
+                         SpeculativeDecoder, decode_response,
+                         sequential_decode)
+from repro.streams import Producer, Topic
 
-cfg = ModelConfig(name="serve-demo", n_layers=4, d_model=128, n_heads=4,
-                  n_kv_heads=2, d_ff=256, vocab_size=1024,
-                  tie_embeddings=True, attn_chunk=64)
+cfg = ModelConfig(name="serve-demo", n_layers=2, d_model=64, n_heads=2,
+                  n_kv_heads=1, d_ff=128, vocab_size=256,
+                  tie_embeddings=True, attn_chunk=32)
 params = init_params(cfg, jax.random.key(0))
 
-# ---- request/response streams on the shared log ------------------------------
+# ---- request/response topics on the shared log -------------------------------
 system = BoltSystem(n_brokers=4)
 requests = Topic.create(system, "requests")
 responses = Topic.create(system, "responses")
 prod = Producer(requests)
 rng = np.random.default_rng(0)
-BATCH, PROMPT, GEN = 4, 16, 24
+BATCH, PROMPT, GEN = 4, 8, 12
 for rid in range(BATCH):
-    prod.produce({"id": rid,
-                  "prompt": [int(t) for t in rng.integers(2, 1024, PROMPT)]})
+    prod.produce({"id": f"req-{rid}",
+                  "prompt": [int(t) for t in rng.integers(2, 256, PROMPT)]})
 prod.flush()
 
-# ---- serve loop: poll a batch, prefill, decode -------------------------------
-consumer = Consumer(requests)
-batch = consumer.poll(BATCH)
-tokens = jnp.asarray([r["prompt"] for r in batch], jnp.int32)
-
+# ---- batched engine: subscription in, per-token records out ------------------
+eng = ServeEngine(cfg, params, requests, responses, batch_size=BATCH)
 t0 = time.time()
-caches = init_caches(cfg, BATCH, PROMPT + GEN)
-step = jax.jit(lambda p, c, tok, pos: decode_step(cfg, p, c, tok, pos))
-# prefill token-by-token through the decode path (tiny prompt; a production
-# prefill uses forward(want_caches=True) — exercised by the dry-run cells)
-logits = None
-for t in range(PROMPT):
-    logits, caches = step(params, caches, tokens[:, t:t + 1],
-                          jnp.asarray(t, jnp.int32))
-out = [jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)]
-for t in range(PROMPT, PROMPT + GEN - 1):
-    logits, caches = step(params, caches, out[-1][:, None],
-                          jnp.asarray(t, jnp.int32))
-    out.append(jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1))
-gen = jnp.stack(out, axis=1)
+served = eng.poll_and_serve(gen_tokens=GEN)
 dt = time.time() - t0
+print(f"engine served {served} requests, {GEN} tokens each in {dt:.2f}s "
+      f"({served * GEN / max(dt, 1e-9):.1f} tok/s)")
+assert eng.poll_and_serve() == 0      # durable cursor: nothing left to serve
 
-resp = Producer(responses)
-for rid, row in enumerate(np.asarray(gen)):
-    resp.produce({"id": rid, "tokens": [int(t) for t in row]})
-resp.flush()
-print(f"served {BATCH} requests, {GEN} tokens each in {dt:.2f}s "
-      f"({BATCH * GEN / dt:.1f} tok/s)")
-print("responses on stream:", responses.tail)
-check = Consumer(responses).poll(BATCH)
-print("first response:", check[0]["tokens"][:8], "...")
+# clients demux the shared response stream by (id, seq)
+log = responses.log
+out = decode_response(log.read(0, log.visible_tail))
+assert set(out) == {f"req-{r}" for r in range(BATCH)}
+assert all(len(toks) == GEN for toks in out.values())
+print("first response:", out["req-0"][:8], "...")
+
+# ---- speculative decoding: each rollout is a log.speculate() session ---------
+dcfg = ModelConfig(name="serve-draft", n_layers=1, d_model=32, n_heads=2,
+                   n_kv_heads=1, d_ff=64, vocab_size=256,
+                   tie_embeddings=True, attn_chunk=32)
+target = ModelTarget(cfg, params, stats=system.serve_stats)
+draft = ModelDraft(dcfg, init_params(dcfg, jax.random.key(1)),
+                   stats=system.serve_stats)
+spec_log = system.create_log("spec-responses")
+dec = SpeculativeDecoder(target, draft, k=2, stats=system.serve_stats)
+
+prompt = [int(t) for t in rng.integers(2, 256, PROMPT)]
+ref = sequential_decode(target, prompt, GEN)
+res = dec.decode_request(spec_log, "spec-0", prompt, GEN)
+assert res.tokens == ref              # greedy speculative decoding is exact
+view = decode_response(spec_log.read(0, spec_log.visible_tail))
+assert view == {"spec-0": ref}        # ... and so is the stream itself
+rejected = sum(1 for r in res.rollouts if r.rejected)
+print(f"speculative: {len(res.tokens)} tokens in {len(res.rollouts)} "
+      f"speculate() sessions ({rejected} aborted with no trace, "
+      f"acceptance {res.acceptance:.2f}) — byte-identical to sequential")

@@ -58,7 +58,7 @@ from .faults import (FaultConfig, FaultPlane, RetryPolicy, RetryStats,
 from .gc import GarbageCollector, GCConfig, GCStats
 from .objectstore import MemoryObjectStore, ObjectStore, TieredObjectStore
 from .raft import MetadataService
-from .sim import SpecStats
+from .sim import ServeStats, SpecStats
 
 
 def _legacy(old: str, new: str) -> None:
@@ -575,6 +575,7 @@ class BoltSystem:
         self._next_broker = 1
         self._dead: Set[int] = set()             # failed broker ids
         self.spec_stats = SpecStats()            # session counters (§12)
+        self.serve_stats = ServeStats()          # serving counters (§17)
         # -- segment GC (DESIGN.md §13). Manifest accounting in the metadata
         # layer is always on; `gc` only shapes the reaper: None -> manual
         # (explicit system.gc()/gc_quantum()), True -> background quanta on
@@ -777,6 +778,31 @@ class BoltSystem:
     def create_log(self, name: str) -> "AgileLog":
         log_id = self.metadata.propose(("create_root", name))
         return AgileLog(self, log_id, self._broker_for_root())
+
+    def open_log(self, log_id: int) -> "AgileLog":
+        """Fresh client handle for an EXISTING log id — the re-attach path
+        (DESIGN.md §17): checkpoint manifests and serving catalogs record
+        fork ids durably, and a restarted process opens them by id. Brokers
+        are stateless, so the handle routes through the normal placement
+        map (forks keep their isolation broker, roots stay on broker 0)."""
+        meta = self.metadata.state.logs.get(log_id)
+        if meta is None or not meta.alive:
+            raise UnknownLog(f"log {log_id} does not exist or is dead")
+        if meta.kind == "root" or meta.parent is None:
+            return AgileLog(self, log_id, self._broker_for_root())
+        broker = self._broker_for_fork(
+            meta.parent, self._broker_for_root().broker_id, dedicated=False)
+        return AgileLog(self, log_id, broker)
+
+    def find_log(self, name: str) -> Optional["AgileLog"]:
+        """Root log by exact name, or None — the lookup half of the
+        re-attach path (``create_log`` is not idempotent: calling it twice
+        makes two roots). Newest wins if names were reused."""
+        for log_id in sorted(self.metadata.state.logs, reverse=True):
+            meta = self.metadata.state.logs[log_id]
+            if meta.kind == "root" and meta.name == name and meta.alive:
+                return AgileLog(self, log_id, self._broker_for_root())
+        return None
 
     # -- broker failover (straggler mitigation §6; crash recovery §15) --------------
     def fail_broker(self, broker_id: int) -> None:

@@ -102,6 +102,33 @@ class SpecStats:
     replayed_records: int = 0  # suffix records re-sequenced by rebases
 
 
+@dataclass
+class ServeStats:
+    """Serving-on-the-log counters (DESIGN.md §17), one per BoltSystem.
+    The serve engine and speculative-decode driver bump these; benchmarks
+    read accepted-token throughput and rollout economics out of the same
+    ``OpTally.capture`` snapshot that reports PUT/proposal amortization —
+    the point being that tokens/s and commits/s are the SAME budget when
+    responses ride the log."""
+
+    requests: int = 0          # request records consumed from a request log
+    responses: int = 0         # response streams completed (EOS committed)
+    model_steps: int = 0       # target-model invocations (prefill/decode/verify)
+    draft_steps: int = 0       # draft-model invocations (speculative only)
+    tokens_out: int = 0        # tokens durably committed to response streams
+    tokens_drafted: int = 0    # draft tokens proposed by rollout sessions
+    tokens_accepted: int = 0   # draft tokens verification accepted
+    tokens_rejected: int = 0   # draft tokens squashed with their rollout
+    rollouts: int = 0          # speculate() rollout sessions opened
+    rollouts_rejected: int = 0 # rollouts aborted wholesale (no trace, §12)
+    reanchors: int = 0         # rollout commits re-anchored past a moved tail
+
+    @property
+    def acceptance(self) -> float:
+        """Fraction of drafted tokens the target model accepted."""
+        return self.tokens_accepted / max(1, self.tokens_drafted)
+
+
 def _fault_count(system, key: str) -> int:
     """Read one fault-plane counter off a system (0 without a plane)."""
     plane = getattr(system, "faults", None)
@@ -147,6 +174,12 @@ class OpTally:
     msgs_delayed: int = 0     # consensus messages held for later delivery (§16)
     msgs_duplicated: int = 0  # consensus messages delivered twice (§16)
     fenced_rejections: int = 0  # stale-term appends/reads fenced (§16)
+    serve_steps: int = 0        # target-model invocations (§17)
+    serve_draft_steps: int = 0  # draft-model invocations (§17)
+    serve_tokens_out: int = 0   # tokens committed to response streams (§17)
+    serve_tokens_accepted: int = 0  # draft tokens verification accepted (§17)
+    serve_tokens_rejected: int = 0  # draft tokens squashed, no trace (§17)
+    serve_reanchors: int = 0    # rollout commits re-anchored over a moved tail
 
     @classmethod
     def capture(cls, system, records: int = 0) -> "OpTally":
@@ -154,6 +187,7 @@ class OpTally:
         Store backends without counters (e.g. FileObjectStore) report 0."""
         view_stats = system.metadata.state.stats
         spec = getattr(system, "spec_stats", None) or SpecStats()
+        serve = getattr(system, "serve_stats", None) or ServeStats()
         return cls(records=records,
                    proposals=system.metadata.proposals,
                    puts=getattr(system.store, "put_count", 0),
@@ -183,7 +217,13 @@ class OpTally:
                    msgs_dropped=_fault_count(system, "msgs_dropped"),
                    msgs_delayed=_fault_count(system, "msgs_delayed"),
                    msgs_duplicated=_fault_count(system, "msgs_duplicated"),
-                   fenced_rejections=_fault_count(system, "fenced_rejections"))
+                   fenced_rejections=_fault_count(system, "fenced_rejections"),
+                   serve_steps=serve.model_steps,
+                   serve_draft_steps=serve.draft_steps,
+                   serve_tokens_out=serve.tokens_out,
+                   serve_tokens_accepted=serve.tokens_accepted,
+                   serve_tokens_rejected=serve.tokens_rejected,
+                   serve_reanchors=serve.reanchors)
 
     def delta(self, since: "OpTally") -> "OpTally":
         return OpTally(records=self.records - since.records,
@@ -212,7 +252,17 @@ class OpTally:
                        msgs_delayed=self.msgs_delayed - since.msgs_delayed,
                        msgs_duplicated=self.msgs_duplicated - since.msgs_duplicated,
                        fenced_rejections=(self.fenced_rejections
-                                          - since.fenced_rejections))
+                                          - since.fenced_rejections),
+                       serve_steps=self.serve_steps - since.serve_steps,
+                       serve_draft_steps=(self.serve_draft_steps
+                                          - since.serve_draft_steps),
+                       serve_tokens_out=(self.serve_tokens_out
+                                         - since.serve_tokens_out),
+                       serve_tokens_accepted=(self.serve_tokens_accepted
+                                              - since.serve_tokens_accepted),
+                       serve_tokens_rejected=(self.serve_tokens_rejected
+                                              - since.serve_tokens_rejected),
+                       serve_reanchors=self.serve_reanchors - since.serve_reanchors)
 
     @property
     def proposals_per_record(self) -> float:
@@ -248,6 +298,10 @@ class ServiceTimes:
     cold_get_per_kb: float = 8e-6          # slower first byte + decompression
     cold_put_base: float = 3e-3            # demotion PUT into the cold class
     cold_put_per_kb: float = 4e-6
+    serve_dispatch: float = 25e-6          # host-side model-step dispatch (§17:
+                                           # kernel launch + batch marshaling,
+                                           # charged per model invocation on
+                                           # top of the roofline step time)
 
 
 def percentile(sorted_vals: List[float], p: float) -> float:

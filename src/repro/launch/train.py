@@ -39,27 +39,40 @@ def small_config(d_model: int, n_layers: int, vocab: int) -> ModelConfig:
 
 def run(steps: int = 100, d_model: int = 128, n_layers: int = 4,
         batch: int = 4, seq: int = 128, vocab: int = 2048,
-        resume: bool = False, store=None, log_every: int = 20,
+        resume: bool = False, store=None, system=None, log_every: int = 20,
         ckpt_every: int = 50, seed: int = 0):
     cfg = small_config(d_model, n_layers, vocab)
     total, _ = cfg.count_params()
     print(f"model: {cfg.name} ({total/1e6:.1f}M params)")
 
     # ---- data plane: the forkable shared log --------------------------------
-    system = BoltSystem(n_brokers=4, store=store)
-    topic = Topic.create(system, "train-tokens")
-    writer = TokenStreamWriter(topic, batch_docs=64)
-    for doc in synthetic_token_docs(4000, vocab=vocab, min_len=64,
-                                    max_len=512, seed=seed):
-        writer.write_doc(doc)
-    writer.flush()
+    # The log is a durable shared SERVICE; the training job is a client.
+    # Crash/resume means the job re-attaches to the same BoltSystem (pass
+    # `system=`), finds its token stream and checkpoint catalog by name, and
+    # resumes — checkpoints are log forks now (DESIGN.md §17), so their
+    # lineage lives in the log's metadata, not in ad-hoc store keys.
+    system = system if system is not None else BoltSystem(n_brokers=4,
+                                                          store=store)
+    existing = system.find_log("train-tokens")
+    if existing is None:
+        topic = Topic.create(system, "train-tokens")
+        writer = TokenStreamWriter(topic, batch_docs=64)
+        for doc in synthetic_token_docs(4000, vocab=vocab, min_len=64,
+                                        max_len=512, seed=seed):
+            writer.write_doc(doc)
+        writer.flush()
+    else:
+        topic = Topic("train-tokens", existing)
     pipe = LogDataPipeline(topic, batch_size=batch, seq_len=seq)
 
     # ---- model + optimizer ----------------------------------------------------
     opt_cfg = AdamWConfig(lr=1e-3, weight_decay=0.01)
-    ckpt = CheckpointManager(system.store, prefix="ckpt")
+    ckpt = CheckpointManager(system, prefix="ckpt")
     start_step = 0
     if resume and ckpt.latest_step() is not None:
+        orphans = ckpt.recover()    # reclaim forks a crashed save left behind
+        if orphans:
+            print(f"recovered {len(orphans)} orphaned checkpoint fork(s)")
         start_step, params, opt_state, extra = ckpt.restore()
         pipe.restore(tuple(extra["cursor"]))
         print(f"resumed from step {start_step}, cursor {extra['cursor']}")

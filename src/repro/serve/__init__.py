@@ -1,5 +1,25 @@
-"""Serving substrate: batched decode engine fed by request streams."""
+"""Serving ON the log (DESIGN.md §17): subscription-fed batched decode,
+speculative-decode rollouts as ``log.speculate()`` sessions, and
+hlo_cost-derived step costs for the DES benchmarks.
 
-from .engine import ServeEngine
+``ServeEngine`` / ``ModelTarget`` / ``ModelDraft`` need JAX, so they load
+lazily — the DES benchmark imports only the JAX-free half (``costs``,
+``speculative``)."""
 
-__all__ = ["ServeEngine"]
+from .costs import ServeCosts
+from .speculative import (DecodeResult, RolloutResult, SpeculativeDecoder,
+                          decode_response, sequential_decode,
+                          sequential_decode_on_log)
+
+__all__ = ["ServeEngine", "ModelTarget", "ModelDraft", "ServeCosts",
+           "SpeculativeDecoder", "DecodeResult", "RolloutResult",
+           "decode_response", "sequential_decode", "sequential_decode_on_log"]
+
+_LAZY = {"ServeEngine", "ModelTarget", "ModelDraft"}
+
+
+def __getattr__(name: str):
+    if name in _LAZY:
+        from . import engine
+        return getattr(engine, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

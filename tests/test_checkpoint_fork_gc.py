@@ -1,0 +1,308 @@
+"""Checkpoint-as-fork (DESIGN.md §17): checkpoints are log forks, so every
+checkpoint byte is visible to the §13 refcount manifests and reclaimed by the
+same reaper that GCs stream segments.
+
+Covers: save/restore roundtrip (incl. bf16 leaves), keep-prune through
+chain-GC, fork-per-experiment (merge = promote, abandon = squash + GC),
+crash-orphan recovery, §4.1 hold interplay between trunk and experiment
+catalogs, and a churn property bounding byte amplification at 1.2x under
+random save/prune/experiment/recover interleavings.
+"""
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BoltSystem
+from repro.core.errors import AgileLogError
+from repro.core.oracle import (check_manifest_audit, check_storage_liveness,
+                               check_storage_safety)
+from repro.train.checkpoint import CheckpointManager
+
+
+def _params(seed, dtype=np.float32):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.normal(size=(8, 8)).astype(np.float32)
+                             .astype(dtype)),
+            "b": jnp.asarray(rng.normal(size=(8,)).astype(np.float32))}
+
+
+def _opt(seed):
+    return {"m": jnp.zeros((8, 8)), "v": jnp.full((8,), float(seed))}
+
+
+def _assert_trees_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert np.asarray(x).dtype == np.asarray(y).dtype
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def _drain(system):
+    system.flush()
+    for _ in range(32):
+        if not system.gc_quantum():
+            break
+
+
+def _dead(system, log_id):
+    meta = system.metadata.state.logs.get(log_id)
+    return meta is None or not meta.alive
+
+
+# ---------------------------------------------------------------------------
+# roundtrip + atomicity
+# ---------------------------------------------------------------------------
+
+def test_save_restore_roundtrip():
+    system = BoltSystem(n_brokers=2)
+    ckpt = CheckpointManager(system, keep=3)
+    p, o = _params(0), _opt(0)
+    ckpt.save(10, p, o, extra={"cursor": [10, 0]})
+    step, p2, o2, extra = ckpt.restore()
+    assert step == 10 and extra["cursor"] == [10, 0]
+    _assert_trees_equal(p, p2)
+    _assert_trees_equal(o, o2)
+    check_manifest_audit(system.metadata.state)
+
+
+def test_bf16_leaves_roundtrip():
+    system = BoltSystem(n_brokers=2)
+    ckpt = CheckpointManager(system)
+    p = _params(1, dtype=ml_dtypes.bfloat16)
+    ckpt.save(5, p, _opt(1))
+    _, p2, _, _ = ckpt.restore(5)
+    _assert_trees_equal(p, p2)
+
+
+def test_chunked_leaves_roundtrip():
+    system = BoltSystem(n_brokers=2)
+    ckpt = CheckpointManager(system, chunk_bytes=64)   # force many chunks
+    p, o = _params(2), _opt(2)
+    ckpt.save(1, p, o)
+    rec = ckpt._replay()[1]
+    assert max(hi - lo for lo, hi in rec["spans"]) > 1
+    _, p2, o2, _ = ckpt.restore()
+    _assert_trees_equal(p, p2)
+    _assert_trees_equal(o, o2)
+
+
+def test_seed_signature_fails_loudly():
+    system = BoltSystem(n_brokers=2)
+    with pytest.raises(TypeError):
+        CheckpointManager(system.store)
+
+
+def test_reattach_sees_existing_checkpoints():
+    """Checkpoint lineage lives in the log, so a fresh manager (new client
+    process, same shared-log service) finds everything by name."""
+    system = BoltSystem(n_brokers=2)
+    p, o = _params(3), _opt(3)
+    CheckpointManager(system).save(7, p, o)
+    again = CheckpointManager(system)
+    assert again.steps() == [7]
+    _, p2, _, _ = again.restore()
+    _assert_trees_equal(p, p2)
+
+
+# ---------------------------------------------------------------------------
+# prune == squash == chain-GC (the seed's leak, fixed)
+# ---------------------------------------------------------------------------
+
+def test_prune_hands_bytes_to_reaper():
+    system = BoltSystem(n_brokers=2, gc=True)
+    ckpt = CheckpointManager(system, keep=2)
+    forks = {s: ckpt.save(s, _params(s), _opt(s)) for s in (10, 20, 30)}
+    assert ckpt.steps() == [20, 30]               # 10 pruned
+    assert _dead(system, forks[10])               # its data fork is squashed
+    assert not _dead(system, forks[20]) and not _dead(system, forks[30])
+    _drain(system)
+    # every byte the store still holds is referenced by a live manifest
+    check_manifest_audit(system.metadata.state)
+    check_storage_safety(system)
+    check_storage_liveness(system)
+    # restorable checkpoints actually restore after the reaper ran
+    _, p2, _, _ = ckpt.restore(20)
+    _assert_trees_equal(_params(20), p2)
+
+
+def test_prune_is_recorded_in_catalog():
+    system = BoltSystem(n_brokers=2)
+    ckpt = CheckpointManager(system, keep=1)
+    for s in (1, 2, 3):
+        ckpt.save(s, _params(s), _opt(s))
+    # a second manager replays the same catalog to the same index
+    assert CheckpointManager(system, keep=1).steps() == [3]
+
+
+# ---------------------------------------------------------------------------
+# crash orphans: the §13 reaper path replaces the seed's leak
+# ---------------------------------------------------------------------------
+
+def _crashed_save(ckpt, nbytes=4096):
+    """Simulate a save that died between the data-fork flush and the catalog
+    append: a live fork full of bytes that no manifest references."""
+    fork = ckpt.data_root.cfork(promotable=False)
+    fork.append_batch([b"x" * 512 for _ in range(nbytes // 512)]).wait()
+    fork.flush()
+    return fork.log_id
+
+
+def test_recover_squashes_crash_orphans():
+    system = BoltSystem(n_brokers=2, gc=True)
+    ckpt = CheckpointManager(system, keep=3)
+    ckpt.save(1, _params(1), _opt(1))
+    orphan = _crashed_save(ckpt)
+    assert not _dead(system, orphan)
+    recovered = ckpt.recover()
+    assert recovered == [orphan]
+    assert _dead(system, orphan)
+    _drain(system)
+    check_storage_liveness(system)
+    assert ckpt.steps() == [1]                    # real checkpoint untouched
+    assert ckpt.recover() == []                   # idempotent
+
+
+def test_recover_keeps_experiment_referenced_forks():
+    """A fork referenced only by a live experiment catalog is NOT an orphan:
+    recover() must scan experiment forks too, or a concurrent experiment's
+    checkpoint gets destroyed."""
+    system = BoltSystem(n_brokers=2)
+    ckpt = CheckpointManager(system, keep=3)
+    exp = ckpt.experiment("sweep")
+    fid = exp.save(100, _params(9), _opt(9))
+    assert ckpt.recover() == []                   # trunk can't see the save,
+    assert not _dead(system, fid)                 # but must not reap it
+    exp.merge()
+    assert ckpt.steps() == [100]
+
+
+# ---------------------------------------------------------------------------
+# fork-per-experiment: merge = promote, abandon = squash + chain-GC
+# ---------------------------------------------------------------------------
+
+def test_experiment_merge_lands_saves_atomically():
+    system = BoltSystem(n_brokers=2)
+    ckpt = CheckpointManager(system, keep=5)
+    ckpt.save(10, _params(0), _opt(0))
+    with ckpt.experiment("lr-sweep") as exp:
+        assert exp.steps() == [10]                # trunk state visible (ltt)
+        exp.save(20, _params(1), _opt(1))
+        exp.save(30, _params(2), _opt(2))
+        assert ckpt.steps() == [10]               # withheld from trunk (§4.1)
+    assert ckpt.steps() == [10, 20, 30]           # squash-on-merge landed
+    _, p2, _, _ = ckpt.restore(30)
+    _assert_trees_equal(_params(2), p2)
+    check_manifest_audit(system.metadata.state)
+
+
+def test_experiment_abandon_reclaims_every_byte():
+    system = BoltSystem(n_brokers=2, gc=True)
+    ckpt = CheckpointManager(system, keep=5)
+    ckpt.save(10, _params(0), _opt(0))
+    exp = ckpt.experiment("doomed")
+    fid = exp.save(20, _params(1), _opt(1))
+    exp.abandon()
+    assert ckpt.steps() == [10]                   # trunk untouched
+    assert _dead(system, fid)
+    _drain(system)
+    check_storage_safety(system)
+    check_storage_liveness(system)
+    _, p2, _, _ = ckpt.restore(10)
+    _assert_trees_equal(_params(0), p2)
+
+
+def test_experiment_abandons_on_exception():
+    system = BoltSystem(n_brokers=2)
+    ckpt = CheckpointManager(system, keep=5)
+    with pytest.raises(RuntimeError):
+        with ckpt.experiment("boom") as exp:
+            exp.save(1, _params(0), _opt(0))
+            raise RuntimeError("training diverged")
+    assert ckpt.steps() == []
+    with pytest.raises(AgileLogError):
+        exp.save(2, _params(1), _opt(1))          # closed experiments refuse
+
+
+def test_trunk_saves_during_experiment_are_withheld_not_lost():
+    """§4.1: an open (promotable) experiment holds the trunk catalog — a
+    trunk save during the experiment is sequenced but withheld, and becomes
+    visible once the experiment resolves."""
+    system = BoltSystem(n_brokers=2)
+    ckpt = CheckpointManager(system, keep=5)
+    exp = ckpt.experiment("hold")
+    ckpt.save(10, _params(0), _opt(0))            # sequenced-but-withheld
+    assert ckpt.steps() == []                     # trunk reader capped
+    exp.abandon()
+    assert ckpt.steps() == [10]                   # released by the resolve
+    _, p2, _, _ = ckpt.restore(10)
+    _assert_trees_equal(_params(0), p2)
+
+
+# ---------------------------------------------------------------------------
+# the real training loop: crash/resume trace audits clean
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_train_checkpoint_restore_trace_audits_clean():
+    """Drive the actual launch driver through a crash/resume cycle on ONE
+    shared-log service: checkpoint bytes must appear in (and audit against)
+    the §13 refcount manifests over the whole trace, and resume must pick up
+    the training step where the crashed client stopped."""
+    from repro.launch.train import run
+
+    system = BoltSystem(n_brokers=2, gc=True)
+    run(steps=20, d_model=32, n_layers=2, batch=2, seq=32, vocab=256,
+        system=system, ckpt_every=10, log_every=10)
+    check_manifest_audit(system.metadata.state)
+    losses, _, _ = run(steps=30, d_model=32, n_layers=2, batch=2, seq=32,
+                       vocab=256, system=system, ckpt_every=10, log_every=10,
+                       resume=True)
+    assert len(losses) == 10                      # resumed at step 20
+    ckpt = CheckpointManager(system)
+    assert ckpt.latest_step() == 30
+    _drain(system)
+    check_manifest_audit(system.metadata.state)
+    check_storage_safety(system)
+    check_storage_liveness(system, max_byte_amplification=1.2)
+
+
+# ---------------------------------------------------------------------------
+# churn property: byte amplification stays bounded
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 3), st.booleans()),
+                min_size=4, max_size=14))
+def test_checkpoint_churn_bounds_amplification(ops):
+    """Random save / crashed-save / experiment(merge|abandon) / recover
+    churn, then drain GC: the §13 manifests must audit clean and the store
+    must hold at most 1.2x the live checkpoint bytes (the seed's leaked
+    orphans and pruned leaves would fail this immediately)."""
+    system = BoltSystem(n_brokers=2, gc=True)
+    ckpt = CheckpointManager(system, keep=2)
+    step = 0
+    for op, flag in ops:
+        step += 1
+        if op == 0:
+            ckpt.save(step, _params(step), _opt(step))
+        elif op == 1:
+            _crashed_save(ckpt)
+        elif op == 2:
+            exp = ckpt.experiment(f"e{step}")
+            exp.save(step * 1000, _params(step), _opt(step))
+            if flag:
+                exp.merge()
+            else:
+                exp.abandon()
+        else:
+            ckpt.recover()
+    ckpt.recover()
+    _drain(system)
+    check_manifest_audit(system.metadata.state)
+    check_storage_safety(system)
+    check_storage_liveness(system, max_byte_amplification=1.2)
+    for s in ckpt.steps():                        # survivors all restore
+        ckpt.restore(s)

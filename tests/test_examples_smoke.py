@@ -1,0 +1,39 @@
+"""Slow-lane smoke for the end-to-end examples: each one must run to
+completion as a real subprocess (its own interpreter, PYTHONPATH=src), the
+way CI and a new user invoke it. The examples assert their own invariants
+(exact speculative decode, durable serve cursor, crash/resume), so a zero
+exit code is the contract."""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+
+def _run_example(name, *extra):
+    env = dict(os.environ, PYTHONPATH=str(ROOT / "src"))
+    proc = subprocess.run(
+        [sys.executable, str(ROOT / "examples" / name), *extra],
+        env=env, cwd=ROOT, capture_output=True, text=True, timeout=900)
+    assert proc.returncode == 0, (
+        f"{name} failed:\n--- stdout ---\n{proc.stdout[-2000:]}"
+        f"\n--- stderr ---\n{proc.stderr[-2000:]}")
+    return proc.stdout
+
+
+@pytest.mark.slow
+def test_serve_example_smoke():
+    out = _run_example("serve.py")
+    assert "engine served 4 requests" in out
+    assert "byte-identical to sequential" in out
+
+
+@pytest.mark.slow
+def test_train_e2e_example_smoke():
+    out = _run_example("train_e2e.py", "--steps", "60")
+    assert "resumed from step" in out
+    assert "phase2 final" in out

@@ -1,4 +1,9 @@
-"""Serving engine + checkpoint substrate integration tests."""
+"""Serving engine + checkpoint substrate integration tests (§17 APIs).
+
+The deep suites live in ``test_serve_on_log.py`` / ``test_checkpoint_fork_gc``
+— this file keeps the original end-to-end scenarios alive on the reworked
+interfaces: a subscription-fed engine emitting (id, seq) token records, and a
+CheckpointManager whose checkpoints are log forks."""
 
 import jax
 import numpy as np
@@ -6,8 +11,8 @@ import numpy as np
 from repro.core import BoltSystem
 from repro.models.config import ModelConfig
 from repro.models.lm import init_params
-from repro.serve import ServeEngine
-from repro.streams import Consumer, Producer, Topic
+from repro.serve import ServeEngine, decode_response
+from repro.streams import Producer, Topic
 from repro.train.checkpoint import CheckpointManager
 from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
 
@@ -27,18 +32,24 @@ def test_serve_engine_roundtrip():
     prod = Producer(req)
     rng = np.random.default_rng(0)
     for rid in range(3):
-        prod.produce({"id": rid,
+        prod.produce({"id": f"r{rid}",
                       "prompt": [int(t) for t in rng.integers(2, 128, 5)]})
     prod.flush()
     eng = ServeEngine(cfg, params, req, resp, batch_size=4)
-    n = eng.poll_and_serve(gen_tokens=4)
-    assert n == 3
-    out = Consumer(resp).poll(8)
-    assert {r["id"] for r in out} == {0, 1, 2}
-    assert all(len(r["tokens"]) == 4 for r in out)
-    assert all(0 <= t < cfg.vocab_size for r in out for t in r["tokens"])
-    # idempotent-ish: nothing left to serve
+    assert eng.poll_and_serve(gen_tokens=4) == 3
+    # responses are per-token (id, seq) records on the shared stream
+    log = resp.log
+    out = decode_response(log.read(0, log.visible_tail))
+    assert set(out) == {"r0", "r1", "r2"}
+    assert all(len(toks) == 4 for toks in out.values())
+    assert all(0 <= t < cfg.vocab_size for toks in out.values() for t in toks)
+    # durable request cursor: nothing left to serve...
     assert eng.poll_and_serve() == 0
+    # ...even for a RESTARTED engine in the same consumer group
+    eng2 = ServeEngine(cfg, params, req, resp, batch_size=4)
+    assert eng2.poll_and_serve() == 0
+    assert system.serve_stats.requests == 3
+    assert system.serve_stats.responses == 3
 
 
 def test_checkpoint_atomic_roundtrip_and_gc():
@@ -46,17 +57,23 @@ def test_checkpoint_atomic_roundtrip_and_gc():
     params = init_params(cfg, jax.random.key(1))
     opt_cfg = AdamWConfig()
     opt = adamw_init(params, opt_cfg)
-    system = BoltSystem(n_brokers=2)
-    ckpt = CheckpointManager(system.store, keep=2)
+    system = BoltSystem(n_brokers=2, gc=True)
+    ckpt = CheckpointManager(system, keep=2)
     grads = jax.tree.map(lambda p: 0.01 * jax.numpy.ones_like(p), params)
+    forks = {}
     for step in (10, 20, 30):
         params, opt, _ = adamw_update(params, grads, opt, opt_cfg)
-        ckpt.save(step, params, opt, extra={"cursor": [step, 0]})
+        forks[step] = ckpt.save(step, params, opt,
+                                extra={"cursor": [step, 0]})
     assert ckpt.latest_step() == 30
     step, p2, o2, extra = ckpt.restore()
     assert step == 30 and extra["cursor"] == [30, 0]
     for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
-    # keep=2 garbage-collected step 10
-    assert not any("step-00000010" in k for k in system.store.list("ckpt/"))
-    assert any("step-00000020" in k for k in system.store.list("ckpt/"))
+    # keep=2 pruned step 10: its data FORK is dead (squash -> §13 chain-GC),
+    # steps 20/30 stay live and restorable
+    logs = system.metadata.state.logs
+    meta10 = logs.get(forks[10])
+    assert meta10 is None or not meta10.alive
+    assert ckpt.steps() == [20, 30]
+    ckpt.restore(20)

@@ -1,0 +1,233 @@
+"""Serving ON the log (DESIGN.md §17): speculative decoding as speculation
+sessions, exactness against sequential greedy decode, no-trace aborts,
+re-anchoring over a moving response tail, and the subscription-fed engine.
+
+The synthetic target/draft pair mirrors ``benchmarks/bench_serve.py``: the
+target's greedy token is a hash of the prefix, the draft agrees except where
+a second hash says otherwise — fully deterministic, no JAX on the equivalence
+path. The JAX adapters (``ModelTarget`` / ``ModelDraft``) get their own
+slow-lane test driving real ``decode_step`` weights through the same driver.
+"""
+
+import hashlib
+
+import pytest
+
+from repro.core import BoltSystem
+from repro.core.oracle import check_manifest_audit, check_storage_liveness
+from repro.serve.speculative import (SpeculativeDecoder, decode_response,
+                                     encode_eos, encode_token,
+                                     sequential_decode,
+                                     sequential_decode_on_log)
+from repro.streams.records import decode_record
+
+VOCAB = 211
+
+
+def _next_token(prefix):
+    h = hashlib.blake2b(b"".join(t.to_bytes(2, "big") for t in prefix[-16:]),
+                        digest_size=4).digest()
+    return int.from_bytes(h[:2], "big") % VOCAB
+
+
+class SynthTarget:
+    def verify(self, prefix, draft):
+        out, p = [], list(prefix)
+        for i in range(len(draft) + 1):
+            out.append(_next_token(p))
+            if i < len(draft):
+                p.append(draft[i])
+        return out
+
+
+class SynthDraft:
+    """Disagrees with the target on ~1/8 of positions (prefix-hash salted)."""
+
+    def __init__(self, salt=b"d", mod=8):
+        self.salt, self.mod = salt, mod
+
+    def propose(self, prefix, k):
+        out, p = [], list(prefix)
+        for _ in range(k):
+            t = _next_token(p)
+            h = hashlib.blake2b(self.salt + len(p).to_bytes(4, "big")
+                                + t.to_bytes(2, "big"), digest_size=2).digest()
+            if h[0] % self.mod == 0:
+                t = (t + 1) % VOCAB
+            out.append(t)
+            p.append(t)
+        return out
+
+
+class WrongDraft:
+    """Always disagrees at position 0: every rollout aborts."""
+
+    def propose(self, prefix, k):
+        out, p = [], list(prefix)
+        for _ in range(k):
+            t = (_next_token(p) + 1) % VOCAB
+            out.append(t)
+            p.append(t)
+        return out
+
+
+def _decode(system, draft, prompt, max_new, k=4, name="resp"):
+    root = system.create_log(name)
+    dec = SpeculativeDecoder(SynthTarget(), draft, k=k,
+                             stats=system.serve_stats)
+    res = dec.decode_request(root, "r0", prompt, max_new)
+    return root, res
+
+
+# ---------------------------------------------------------------------------
+# exactness: speculative == sequential greedy, record for record
+# ---------------------------------------------------------------------------
+
+def test_speculative_decode_is_exact():
+    prompt = [3, 7, 11, 19]
+    max_new = 24
+    ref = sequential_decode(SynthTarget(), prompt, max_new)
+    system = BoltSystem(n_brokers=2)
+    root, res = _decode(system, SynthDraft(), prompt, max_new)
+    assert res.tokens == ref                      # declared output matches
+    view = decode_response(root.read(0, root.visible_tail))
+    assert view == {"r0": ref}                    # the STREAM matches too
+    # exactly max_new token records + one EOS — aborted rollouts left nothing
+    assert root.visible_tail == max_new + 1
+    eos = decode_record(root.read(max_new, max_new + 1)[0])
+    assert eos == {"id": "r0", "eos": True, "n": max_new}
+    # some rollouts were rejected, or the draft-mixing is vacuous
+    assert any(r.rejected for r in res.rollouts)
+    assert 0.0 < res.acceptance < 1.0
+
+
+def test_speculative_never_overshoots_max_new():
+    for max_new in (1, 2, 4, 5, 9):
+        system = BoltSystem(n_brokers=2)
+        ref = sequential_decode(SynthTarget(), [1, 2], max_new)
+        root, res = _decode(system, SynthDraft(), [1, 2], max_new)
+        assert res.tokens == ref and len(res.tokens) == max_new
+
+
+def test_sequential_on_log_matches_reference():
+    system = BoltSystem(n_brokers=2)
+    root = system.create_log("resp")
+    ref = sequential_decode(SynthTarget(), [5, 6], 12)
+    out = sequential_decode_on_log(SynthTarget(), root, "r0", [5, 6], 12)
+    assert out == ref
+    assert decode_response(root.read(0, root.visible_tail)) == {"r0": ref}
+    assert root.visible_tail == 13                # 12 tokens + EOS
+
+
+# ---------------------------------------------------------------------------
+# no trace: rejected rollouts are squashed sessions
+# ---------------------------------------------------------------------------
+
+def test_rejected_rollouts_leave_no_trace():
+    system = BoltSystem(n_brokers=2, gc=True)
+    ref = sequential_decode(SynthTarget(), [9], 8)
+    root, res = _decode(system, WrongDraft(), [9], 8)
+    assert all(r.rejected for r in res.rollouts if r.drafted)
+    assert res.acceptance == 0.0
+    assert res.tokens == ref                      # corrections still exact
+    # flattened view holds ONLY the committed tokens + EOS
+    recs = [decode_record(r) for r in root.read(0, root.visible_tail)]
+    assert [r["tok"] for r in recs if not r.get("eos")] == ref
+    # the aborted forks' records are dead metadata: GC reclaims their bytes
+    system.flush()
+    system.gc()
+    check_manifest_audit(system.metadata.state)
+    check_storage_liveness(system)
+
+
+# ---------------------------------------------------------------------------
+# re-anchoring: commits rebase over a tail other writers moved
+# ---------------------------------------------------------------------------
+
+def test_rollout_commits_reanchor_over_moving_tail():
+    system = BoltSystem(n_brokers=2)
+    root = system.create_log("resp")
+    monitor = [0]
+
+    def pump(_positions):
+        # another writer advances the response tail DURING the verify pass
+        root.append(encode_eos("__monitor", monitor[0]))
+        monitor[0] += 1
+
+    dec = SpeculativeDecoder(SynthTarget(), SynthDraft(), k=4,
+                             stats=system.serve_stats, on_target=pump)
+    ref = sequential_decode(SynthTarget(), [2, 4], 16)
+    res = dec.decode_request(root, "r0", [2, 4], 16)
+    assert res.tokens == ref
+    assert system.serve_stats.reanchors > 0       # rebases actually happened
+    assert sum(r.rebases for r in res.rollouts) == system.serve_stats.reanchors
+    # (id, seq) demux is interleaving-proof: monitor records don't corrupt
+    view = decode_response(root.read(0, root.visible_tail))
+    assert view == {"r0": ref}
+    assert root.visible_tail == 16 + 1 + monitor[0]
+
+
+def test_interleaved_requests_share_one_response_log():
+    system = BoltSystem(n_brokers=2)
+    root = system.create_log("resp")
+    dec = SpeculativeDecoder(SynthTarget(), SynthDraft(), k=3,
+                             stats=system.serve_stats)
+    refs, results = {}, {}
+    for rid, prompt in (("a", [1]), ("b", [2, 3]), ("c", [4, 5, 6])):
+        refs[rid] = sequential_decode(SynthTarget(), prompt, 10)
+        results[rid] = dec.decode_request(root, rid, prompt, 10).tokens
+    assert results == refs
+    assert decode_response(root.read(0, root.visible_tail)) == refs
+
+
+# ---------------------------------------------------------------------------
+# stats plumbing
+# ---------------------------------------------------------------------------
+
+def test_serve_stats_accounting():
+    system = BoltSystem(n_brokers=2)
+    _, res = _decode(system, SynthDraft(), [7], 12, k=3)
+    s = system.serve_stats
+    assert s.tokens_out == 12 and s.responses == 1
+    assert s.tokens_drafted == sum(r.drafted for r in res.rollouts)
+    assert s.tokens_accepted + s.tokens_rejected == s.tokens_drafted
+    assert s.rollouts == len(res.rollouts)
+    assert s.rollouts_rejected == sum(1 for r in res.rollouts if r.rejected)
+    assert abs(s.acceptance - res.acceptance) < 1e-12
+
+
+def test_decoder_rejects_bad_k():
+    with pytest.raises(ValueError):
+        SpeculativeDecoder(SynthTarget(), SynthDraft(), k=0)
+
+
+# ---------------------------------------------------------------------------
+# JAX adapters: real decode_step weights through the same driver
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_jax_target_draft_speculative_is_exact():
+    import jax
+    from repro.models.config import ModelConfig
+    from repro.models.lm import init_params
+    from repro.serve import ModelDraft, ModelTarget
+
+    tcfg = ModelConfig(name="spec-target", n_layers=2, d_model=32, n_heads=2,
+                       n_kv_heads=1, d_ff=64, vocab_size=128,
+                       tie_embeddings=True, attn_chunk=32)
+    dcfg = ModelConfig(name="spec-draft", n_layers=1, d_model=16, n_heads=2,
+                       n_kv_heads=1, d_ff=32, vocab_size=128,
+                       tie_embeddings=True, attn_chunk=32)
+    system = BoltSystem(n_brokers=2)
+    target = ModelTarget(tcfg, init_params(tcfg, jax.random.key(0)),
+                         stats=system.serve_stats)
+    draft = ModelDraft(dcfg, init_params(dcfg, jax.random.key(1)),
+                       stats=system.serve_stats)
+    prompt = [5, 9, 13]
+    ref = sequential_decode(target, prompt, 8)
+    root = system.create_log("resp")
+    dec = SpeculativeDecoder(target, draft, k=2, stats=system.serve_stats)
+    res = dec.decode_request(root, "r0", prompt, 8)
+    assert res.tokens == ref                      # exact despite a real draft
+    assert decode_response(root.read(0, root.visible_tail)) == {"r0": ref}
+    assert all(0 <= t < tcfg.vocab_size for t in res.tokens)
