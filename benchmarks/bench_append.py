@@ -1,31 +1,100 @@
-"""Group-commit append amortization benchmark (DESIGN.md §9).
+"""Group-commit append amortization + append-ack latency (DESIGN.md §9, §18).
 
-Appends the same record stream — round-robin across several logs co-located on
-one broker — once through the per-call append path and once with group commit,
-and reports metadata proposals and object PUTs *per appended record*, wall-
-clock throughput, and the amortization factor. The two streams must read back
-byte-identical; a mismatch aborts the benchmark (it would mean the batched
-proposal assigned different positions than per-call sequencing).
+Two parts:
+
+* **Amortization** — appends the same record stream — round-robin across
+  several logs co-located on one broker — once through the per-call append
+  path and once with group commit, and reports metadata proposals and object
+  PUTs *per appended record*, wall-clock throughput, and the amortization
+  factor. The two streams must read back byte-identical; a mismatch aborts
+  the benchmark (it would mean the batched proposal assigned different
+  positions than per-call sequencing).
+* **Ack-p99 sweep (§18)** — modeled append-ack p99 on the DES clock across
+  the store backends (memory / file-with-fsync / S3-style ranged), each run
+  sequentially (PUT, then propose) and pipelined (the broker overlaps the
+  segment PUT with the metadata propose; ack = both landed). The overlap
+  hides the propose under the PUT, so pipelined p99 must beat sequential on
+  every backend (CI ``--key-min`` on the speedup keys). Backend cost
+  profiles come from ``StoreProfile`` (§18); memory books the global
+  ``ServiceTimes`` rates — the byte-identical pre-§18 model.
+
+``BENCH_QUICK=1`` shrinks the sweep ~4x for CI smoke. ``BENCH_STORE=file``
+(CI) additionally runs the wall-clock amortization part against the
+tmpdir-scoped fsync'ing backend.
 """
 
 from __future__ import annotations
 
+import os
+import shutil
+import tempfile
 import time
 from typing import List, Optional, Tuple
 
 from repro.core import BoltSystem, GroupCommitConfig
-from repro.core.sim import OpTally
+from repro.core.sim import (OpTally, Resource, ServiceTimes, Simulator,
+                            summarize)
 
-from .common import RECORD, Row
+from .common import RECORD, Row, backend_kwargs
+
+QUICK = os.environ.get("BENCH_QUICK", "") not in ("", "0")
 
 N_LOGS = 4
 N_RECORDS = 4096
 BATCH = 64
 
+DES_OPS = 512 if QUICK else 2048  # ack-p99 sweep: appends per (backend, mode)
+DES_RATE = 600.0                  # arrivals per modeled second
+DES_BACKENDS = ("memory", "file", "ranged")
+
+
+def _ack_p99(backend: str, pipelined: bool, root: Optional[str]) -> float:
+    """Modeled append-ack p99 (seconds) for one (backend, pipeline) cell."""
+    kw = {"store_backend": backend}
+    if backend == "file":
+        kw["store_root"] = os.path.join(root, "pipe" if pipelined else "seq")
+    system = BoltSystem(n_brokers=2, pipelined_io=pipelined, **kw)
+    sim = Simulator()
+    service = ServiceTimes()
+    store_res = Resource(servers=64)
+    for b in system.brokers:
+        b.sim = sim
+        b.service = service
+        b.store_resource = store_res
+    log = system.create_log("p99")
+    broker = log.broker
+    lat: List[float] = []
+    for i in range(DES_OPS):
+        t = i / DES_RATE
+        _, done = broker.append(log.log_id, [RECORD], arrival=t)
+        lat.append(done - t)
+    return summarize(sorted(lat))[2]
+
+
+def _ack_sweep(rows: List[Row]) -> None:
+    root = tempfile.mkdtemp(prefix="agilelog-bench-append-")
+    try:
+        for backend in DES_BACKENDS:
+            seq = _ack_p99(backend, pipelined=False, root=root)
+            pipe = _ack_p99(backend, pipelined=True, root=root)
+            rows.append((f"append/ack_p99/{backend}/sequential_ms", seq * 1e3,
+                         f"PUT then propose, {DES_OPS} appends at "
+                         f"{DES_RATE:.0f}/s on the DES clock"))
+            rows.append((f"append/ack_p99/{backend}/pipelined_ms", pipe * 1e3,
+                         "segment PUT overlapped with the metadata propose "
+                         "(ack = both landed)"))
+            rows.append((f"append/ack_p99/{backend}/overlap_speedup",
+                         seq / pipe,
+                         "sequential/pipelined ack p99 — the propose hides "
+                         "under the PUT (acceptance > 1.0, CI --key-min)"))
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
 
 def _run(group_commit: Optional[GroupCommitConfig]
          ) -> Tuple[OpTally, float, List[List[bytes]]]:
-    system = BoltSystem(n_brokers=2, group_commit=group_commit)
+    system = BoltSystem(n_brokers=2, group_commit=group_commit,
+                        **backend_kwargs())
     logs = [system.create_log(f"log{i}") for i in range(N_LOGS)]
     before = OpTally.capture(system)
     start = time.perf_counter()
@@ -67,4 +136,5 @@ def bench_append() -> List[Row]:
                  f"{gc_tally.bytes_put / max(1, gc_tally.puts):.0f} B/object"))
     rows.append(("append/amortization/throughput",
                  pc_elapsed / gc_elapsed, "wall-clock speedup"))
+    _ack_sweep(rows)
     return rows

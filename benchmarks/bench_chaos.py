@@ -33,8 +33,17 @@ leader into a 2-replica minority mid-run, and heals before the end:
   reconciliation after heal (catch-up rounds x one request/reply RTT each).
   Acceptance (CI ``--key-max``): under 50 modeled ms.
 * **Message-fault counters** — ``msgs_dropped`` / ``msgs_delayed`` /
-  ``msgs_duplicated`` / ``fenced_rejections`` surfaced through ``OpTally``
-  so the JSON records how much abuse the consensus layer absorbed.
+  ``msgs_duplicated`` / ``fenced_rejections`` / ``lease_reads`` /
+  ``lease_fallbacks`` surfaced through ``OpTally`` so the JSON records how
+  much abuse the consensus layer absorbed and how the §18 read fast path
+  split between lease-served and fallback.
+* **Lease-read linearizability** — the partitioned run interleaves reads
+  (served through ``read_state()``: lease-local on the fast path, fenced
+  into the barrier fallback when the deposed leader's lease lapses) and
+  records every append/read into the §16 ``History`` checker; the
+  ``lease_reads_linearizable`` key is 1.0 iff the whole history admits a
+  legal total order. This is the ISSUE's proof obligation that lease reads
+  stay linearizable under partitions.
 
 Both runs share the workload, the DES service model, and the arrival
 process; only the fault plane differs — the ratios isolate the cost of the
@@ -53,7 +62,7 @@ from __future__ import annotations
 import os
 from typing import List, Optional
 
-from repro.core import BoltSystem, FaultConfig, RetryPolicy
+from repro.core import BoltSystem, FaultConfig, History, RetryPolicy
 from repro.core.errors import BrokerCrashed
 from repro.core.sim import (OpTally, Resource, ServiceTimes, Simulator,
                             summarize)
@@ -142,6 +151,10 @@ class _StickyClient:
     def read(self, log_id: int, lo: int, hi: int, t: float):
         return self._attempt(lambda b: b.read(log_id, lo, hi, arrival=t))
 
+    def read_records(self, log_id: int, lo: int, hi: int, t: float):
+        return self._attempt(
+            lambda b: b.read_records(log_id, lo, hi, arrival=t))
+
 
 def _run(faulted: bool, seed: int = SEED) -> dict:
     system = _build(_kill_cfg(seed) if faulted else None)
@@ -204,15 +217,29 @@ def _run_partition(seed: int = SEED) -> dict:
         root = system.metadata.propose(("create_root", "chaos"))
         client = _StickyClient(system)
         before = OpTally.capture(system)
+        hist = History()                       # §16/§18: lease-read history
+        hist.register_log(root, 0)
         acks: List[tuple] = []                 # (arrival, modeled completion)
+        read_hi = 0
         for i in range(N_OPS):
             t = i / RATE
             if cfg is not None:
                 system.faults.advance(t)
             backoff0 = system.retry_stats.backoff_time
-            _, done = client.append(root, t)
-            done += system.retry_stats.backoff_time - backoff0
-            acks.append((t, done))
+            if READ_EVERY and i % READ_EVERY == READ_EVERY - 1 and read_hi:
+                # reads ride read_state(): lease-local on the fast path,
+                # barrier fallback once the partition fences the old lease
+                lo = max(0, read_hi - 16)
+                op = hist.invoke("read", root, (lo, read_hi))
+                recs, _ = client.read_records(root, lo, read_hi, t)
+                hist.resolve(op, tuple(recs))
+            else:
+                op = hist.invoke("append", root, (REC,))
+                pos, done = client.append(root, t)
+                hist.resolve(op, tuple(pos))
+                read_hi += 1
+                done += system.retry_stats.backoff_time - backoff0
+                acks.append((t, done))
         # goodput over the partitioned window only: acked records whose
         # arrival fell inside [t_part, t_heal), per modeled second until the
         # last of them completed — the window where the minority-side leader
@@ -229,11 +256,22 @@ def _run_partition(seed: int = SEED) -> dict:
             out["converge_ms"] = rounds * 2 * ServiceTimes().net_rtt * 1e3
             assert system.metadata.check_convergence(), "no convergence after heal"
             state = system.metadata.state
-            assert state.tails.get(root)[0] == N_OPS, "lost acked appends"
+            assert state.tails.get(root)[0] == read_hi, "lost acked appends"
+            # the final full read settles the history; the checker then rules
+            # on the WHOLE partitioned trace — every lease-served read, every
+            # fenced fallback, every retried append
+            op = hist.invoke("read", root, (0, read_hi))
+            recs, _ = client.read_records(root, 0, read_hi, span)
+            hist.resolve(op, tuple(recs))
+            verdict = hist.check()
+            assert verdict.ok, f"lease-read history not linearizable: " \
+                               f"{verdict.reason}"
+            out["linearizable"] = 1.0
             tally = OpTally.capture(system).delta(before)
             out["counters"] = {k: getattr(tally, k) for k in
                                ("msgs_dropped", "msgs_delayed",
-                                "msgs_duplicated", "fenced_rejections")}
+                                "msgs_duplicated", "fenced_rejections",
+                                "lease_reads", "lease_fallbacks")}
             out["elections"] = system.metadata.elections
     out["ratio"] = out["partitioned"] / out["clean"]
     return out
@@ -278,6 +316,14 @@ def bench_chaos() -> List[Row]:
     rows.append(("chaos/partition/converge_ms", part["converge_ms"],
                  "post-heal divergent-suffix reconciliation, modeled as one "
                  "request/reply RTT per catch-up round (ceiling 50 ms)"))
+    c = part["counters"]
+    rows.append(("chaos/partition/lease_reads_linearizable",
+                 part["linearizable"],
+                 f"§16 checker verdict on the full partitioned history: "
+                 f"{c['lease_reads']} lease-served reads + "
+                 f"{c['lease_fallbacks']} fenced fallbacks + every retried "
+                 "append admit a legal total order (acceptance = 1.0, "
+                 "CI --key-min)"))
     for key, n in sorted(part["counters"].items()):
         rows.append((f"chaos/partition/{key}", float(n),
                      "§16 message-plane abuse absorbed during the run "

@@ -1,6 +1,6 @@
-"""Read-path benchmarks (DESIGN.md §10): the scan-oriented read plane.
+"""Read-path benchmarks (DESIGN.md §10, §18): the scan-oriented read plane.
 
-Five families:
+Six families:
 
 * ``read/lookup``       — Fig 10 revisited: single-position lookup latency vs
                           cFork nesting depth, with and without the
@@ -13,8 +13,16 @@ Five families:
 * ``read/record_size``  — cold-scan throughput across record sizes.
 * ``read/catchup``      — the agent-first pattern: a fresh cFork (cold broker
                           cache) bulk-reads its parent's history.
+* ``read/lease``        — §18 lease-fenced local reads: with the fault plane
+                          live, every tail/lookup/read resolution goes through
+                          ``MetadataService.read_state()`` and must ride the
+                          leader's lease WITHOUT a consensus round. The family
+                          reports metadata proposals per read (acceptance:
+                          ~0 on the fast path, CI ``--key-max``) and the
+                          fraction of reads served from the lease.
 
 Quick mode for CI smoke runs: ``BENCH_QUICK=1`` shrinks sizes ~8x.
+``BENCH_STORE=file`` (CI) swaps the tmpdir-scoped fsync'ing backend in.
 """
 
 from __future__ import annotations
@@ -27,7 +35,7 @@ from repro.core import BoltSystem
 from repro.core.broker import GroupCommitConfig
 from repro.core.metadata import MetadataState
 
-from .common import Row, timeit
+from .common import Row, backend_kwargs, timeit
 
 QUICK = os.environ.get("BENCH_QUICK", "") not in ("", "0")
 
@@ -82,7 +90,7 @@ def bench_read() -> List[Row]:
     sys_ = BoltSystem(
         group_commit=GroupCommitConfig(max_records=seg_records,
                                        max_bytes=8 << 20),
-        cache_page_bytes=64 << 10, readahead_bytes=0)
+        cache_page_bytes=64 << 10, readahead_bytes=0, **backend_kwargs())
     log = _fill(sys_, "seg", seg_records * 4, rec4k, batch=seg_records)
     seg_bytes = seg_records * len(rec4k)
     broker = log.broker
@@ -97,7 +105,8 @@ def bench_read() -> List[Row]:
     n_records = 8_192 if QUICK else 65_536
     rec = b"x" * 256
     sys_ = BoltSystem(group_commit=GroupCommitConfig(max_records=256,
-                                                     max_bytes=1 << 20))
+                                                     max_bytes=1 << 20),
+                      **backend_kwargs())
     log = _fill(sys_, "scan", n_records, rec)
     total_mb = n_records * len(rec) / 1e6
     t0 = time.perf_counter()
@@ -118,7 +127,8 @@ def bench_read() -> List[Row]:
     for size in (256, 4096, 65536):
         k = max(1, total_bytes // size)
         sys_ = BoltSystem(group_commit=GroupCommitConfig(max_records=256,
-                                                         max_bytes=4 << 20))
+                                                         max_bytes=4 << 20),
+                          **backend_kwargs())
         log = _fill(sys_, f"sz{size}", k, b"r" * size,
                     batch=min(256, max(1, (1 << 20) // size)))
         t0 = time.perf_counter()
@@ -130,7 +140,8 @@ def bench_read() -> List[Row]:
 
     # -- agent catch-up: fresh cFork bulk-reads parent history --------------
     sys_ = BoltSystem(group_commit=GroupCommitConfig(max_records=256,
-                                                     max_bytes=1 << 20))
+                                                     max_bytes=1 << 20),
+                      **backend_kwargs())
     root = _fill(sys_, "hist", n_records, rec)
     agent = root.cfork()          # different broker => cold object cache
     t0 = time.perf_counter()
@@ -141,4 +152,33 @@ def bench_read() -> List[Row]:
                  f"{n_records * len(rec) / 1e6 / dt:.0f} MB/s "
                  f"(broker {agent.broker.broker_id}, parent on "
                  f"{root.broker.broker_id})"))
+
+    # -- §18 lease-fenced reads: consensus bypass on the fast path ----------
+    # The plane must be live for leases to exist at all (plane=None is the
+    # pre-§16 single-node path, where every read is trivially local).
+    n_lease = 2_000 if QUICK else 10_000
+    sys_ = BoltSystem(n_brokers=2, faults=True, **backend_kwargs())
+    meta = sys_.metadata
+    log = _fill(sys_, "lease", 4_096, rec, batch=256)
+    p0, l0, f0 = meta.proposals, meta.lease_reads, meta.lease_fallbacks
+    t0 = time.perf_counter()
+    for i in range(n_lease):
+        if i % 8 == 7:
+            log.read(i % 4_000, i % 4_000 + 16)
+        else:
+            assert log.tail == 4_096
+    dt = time.perf_counter() - t0
+    proposals = meta.proposals - p0
+    leased = meta.lease_reads - l0
+    fellback = meta.lease_fallbacks - f0
+    rows.append(("read/lease/us_per_read", dt / n_lease * 1e6,
+                 f"tail+ranged reads via read_state() under the live plane "
+                 f"({n_lease} reads)"))
+    rows.append(("read/lease/proposals_per_read", proposals / n_lease,
+                 f"{proposals} metadata proposals across {n_lease} reads — "
+                 "the fast path rides the lease, not consensus "
+                 "(acceptance ~0, CI --key-max)"))
+    rows.append(("read/lease/fast_path_fraction", leased / max(1, leased + fellback),
+                 f"{leased} lease reads, {fellback} fallbacks "
+                 "(acceptance 1.0 in steady state, CI --key-min)"))
     return rows

@@ -2,12 +2,35 @@
 
 from __future__ import annotations
 
+import atexit
+import os
+import shutil
+import tempfile
 import time
-from typing import Callable, List, Tuple
+from typing import Callable, Dict, List, Tuple
 
 Row = Tuple[str, float, str]  # (name, us_per_call, derived)
 
 RECORD = b"x" * 256  # benchmark record payload (paper uses 4KB; scaled for CPU)
+
+
+def backend_kwargs() -> Dict[str, str]:
+    """``BoltSystem`` kwargs for the ``BENCH_STORE`` env override.
+
+    CI's fast lane runs the append/read smokes with ``BENCH_STORE=file`` so
+    the wall-clock paths exercise the real fsync'ing backend (DESIGN.md §18);
+    the file root is tmpdir-scoped and reaped at interpreter exit. Unset (the
+    default) keeps the seed's in-memory store.
+    """
+    backend = os.environ.get("BENCH_STORE", "")
+    if not backend:
+        return {}
+    kw = {"store_backend": backend}
+    if backend == "file":
+        root = tempfile.mkdtemp(prefix="agilelog-bench-")
+        atexit.register(shutil.rmtree, root, ignore_errors=True)
+        kw["store_root"] = root
+    return kw
 
 
 def timeit(fn: Callable[[], None], n: int, warmup: int = 1) -> float:

@@ -32,21 +32,25 @@ from .compact import (CompactionConfig, Compactor, CompactStats, TieringConfig,
 from .errors import (AgileLogError, AmbiguousProposal, BrokerCrashed,
                      ConflictError, ForkBlocked, InvalidOperation,
                      LeaseExpired, NoLiveBrokers, NoQuorum, NotLeader,
-                     RetryBudgetExhausted, StoreFault, Unavailable, UnknownLog)
+                     ObjectMissing, RetryBudgetExhausted, StoreFault,
+                     Unavailable, UnknownLog)
 from .faults import FaultConfig, FaultPlane, LinkFaults, RetryPolicy, RetryStats
 from .gc import GarbageCollector, GCConfig, GCStats
 from .linearize import History, LinearizeResult, check_log
-from .objectstore import TieredObjectStore
+from .objectstore import (FileObjectStore, MemoryObjectStore, ObjectStore,
+                          RangedStore, StoreProfile, TieredObjectStore)
 
 __all__ = [
     "AgileLog", "AppendReceipt", "BoltSystem", "CommitResult", "Speculation",
     "Subscription", "GroupCommitConfig", "GarbageCollector", "GCConfig",
     "GCStats", "CompactionConfig", "Compactor", "CompactStats",
-    "TieringConfig", "TierManager", "TierStats", "TieredObjectStore",
+    "TieringConfig", "TierManager", "TierStats",
+    "ObjectStore", "StoreProfile", "MemoryObjectStore", "FileObjectStore",
+    "RangedStore", "TieredObjectStore",
     "FaultConfig", "FaultPlane", "LinkFaults", "RetryPolicy", "RetryStats",
     "History", "LinearizeResult", "check_log",
     "AgileLogError", "ConflictError", "ForkBlocked",
-    "InvalidOperation", "UnknownLog",
+    "InvalidOperation", "UnknownLog", "ObjectMissing",
     "Unavailable", "NoQuorum", "NotLeader", "LeaseExpired", "NoLiveBrokers",
     "StoreFault", "BrokerCrashed", "AmbiguousProposal",
     "RetryBudgetExhausted",

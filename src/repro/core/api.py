@@ -42,6 +42,7 @@ log flush first, so read-your-writes is preserved.
 
 from __future__ import annotations
 
+import tempfile
 import time
 import warnings
 from dataclasses import dataclass
@@ -56,7 +57,8 @@ from .errors import (AgileLogError, BrokerCrashed, ConflictError,
 from .faults import (FaultConfig, FaultPlane, RetryPolicy, RetryStats,
                      run_with_retries)
 from .gc import GarbageCollector, GCConfig, GCStats
-from .objectstore import MemoryObjectStore, ObjectStore, TieredObjectStore
+from .objectstore import (FileObjectStore, MemoryObjectStore, ObjectStore,
+                          RangedStore, TieredObjectStore)
 from .raft import MetadataService
 from .sim import ServeStats, SpecStats
 
@@ -325,7 +327,8 @@ class Speculation:
 
     # -- proxied log surface -------------------------------------------------
     def _info(self):
-        return self.parent.system.metadata.state.fork_info(self.log.log_id)
+        return self.parent.system.metadata.read_state().fork_info(
+            self.log.log_id)
 
     def _require_open(self) -> None:
         if self._state != "open":
@@ -524,7 +527,10 @@ class BoltSystem:
                  compaction: Union[None, bool, int, CompactionConfig] = None,
                  tiering: Union[None, bool, int, TieringConfig] = None,
                  faults: Union[None, bool, FaultConfig, FaultPlane] = None,
-                 retry: Optional[RetryPolicy] = None) -> None:
+                 retry: Optional[RetryPolicy] = None,
+                 store_backend: Optional[str] = None,
+                 store_root: Optional[str] = None,
+                 pipelined_io: bool = False) -> None:
         if group_commit is True:
             group_commit = GroupCommitConfig()
         elif group_commit is False or group_commit == 0:
@@ -553,6 +559,27 @@ class BoltSystem:
         elif not isinstance(tiering, TieringConfig):
             raise TypeError(f"tiering must be None, bool, int, or TieringConfig, "
                             f"got {type(tiering).__name__}")
+        # -- store backend selection (DESIGN.md §18). `store_backend` names
+        # one of the protocol backends; `store=` passes an instance directly
+        # (mutually exclusive). "file" roots at `store_root` (a fresh
+        # tempdir when omitted); "tiered" composes with `tiering=`.
+        if store_backend is not None:
+            if store is not None:
+                raise TypeError("pass store= or store_backend=, not both")
+            if store_backend == "memory":
+                store = MemoryObjectStore()
+            elif store_backend == "file":
+                if store_root is None:
+                    store_root = tempfile.mkdtemp(prefix="agilelog-store-")
+                store = FileObjectStore(store_root)
+            elif store_backend == "ranged":
+                store = RangedStore()
+            elif store_backend == "tiered":
+                store = TieredObjectStore()
+            else:
+                raise ValueError(
+                    f"unknown store_backend {store_backend!r}: expected "
+                    f"'memory', 'file', 'ranged', or 'tiered'")
         if store is None:
             store = TieredObjectStore() if tiering is not None else MemoryObjectStore()
         elif tiering is not None and not isinstance(store, TieredObjectStore):
@@ -571,6 +598,8 @@ class BoltSystem:
                                readahead_bytes=readahead_bytes,
                                group_commit=group_commit)
                         for i in range(max(2, n_brokers))]
+        for b in self.brokers:
+            b.pipelined_io = pipelined_io   # PUT ∥ propose ack overlap (§18)
         self._fork_broker: Dict[int, int] = {}   # parent log -> broker for its forks
         self._next_broker = 1
         self._dead: Set[int] = set()             # failed broker ids
@@ -785,7 +814,7 @@ class BoltSystem:
         fork ids durably, and a restarted process opens them by id. Brokers
         are stateless, so the handle routes through the normal placement
         map (forks keep their isolation broker, roots stay on broker 0)."""
-        meta = self.metadata.state.logs.get(log_id)
+        meta = self.metadata.read_state().logs.get(log_id)
         if meta is None or not meta.alive:
             raise UnknownLog(f"log {log_id} does not exist or is dead")
         if meta.kind == "root" or meta.parent is None:
@@ -798,8 +827,9 @@ class BoltSystem:
         """Root log by exact name, or None — the lookup half of the
         re-attach path (``create_log`` is not idempotent: calling it twice
         makes two roots). Newest wins if names were reused."""
-        for log_id in sorted(self.metadata.state.logs, reverse=True):
-            meta = self.metadata.state.logs[log_id]
+        state = self.metadata.read_state()
+        for log_id in sorted(state.logs, reverse=True):
+            meta = state.logs[log_id]
             if meta.kind == "root" and meta.name == name and meta.alive:
                 return AgileLog(self, log_id, self._broker_for_root())
         return None
@@ -965,7 +995,7 @@ class AgileLog:
         if batch <= 0:
             raise InvalidOperation(f"scan batch must be positive, got {batch}")
         self._sync()
-        state = self.system.metadata.state
+        state = self.system.metadata.read_state()
         if hi is None:
             hi = state.visible_tail(self.log_id)
         tail = state.tail(self.log_id)
@@ -999,12 +1029,12 @@ class AgileLog:
     @property
     def tail(self) -> int:
         self._sync()
-        return self.system.metadata.state.tail(self.log_id)
+        return self.system.metadata.read_state().tail(self.log_id)
 
     @property
     def visible_tail(self) -> int:
         self._sync()
-        return self.system.metadata.state.visible_tail(self.log_id)
+        return self.system.metadata.read_state().visible_tail(self.log_id)
 
     # -- forking -----------------------------------------------------------------------
     def cfork(self, promotable: bool = False, dedicated: bool = False) -> "AgileLog":

@@ -138,6 +138,14 @@ class Broker:
         self.faults = None
         self.fleet = None
         self._orphan_puts: set = set()
+        # §18: overlap the segment PUT with the metadata propose in the DES
+        # ack model (execution order stays PUT-then-propose — never sequence
+        # an object that has not landed; ack = both landed). Set by the
+        # system layer; sequential booking is the pre-§18 model.
+        self.pipelined_io = False
+        # §18: stage-epoch guard for clock-driven deadline flushes — a
+        # registered deadline only fires against the batch it was armed for
+        self._stage_epoch = 0
 
     # -- data path ----------------------------------------------------------------
     def append(self, log_id: int, records: Sequence[bytes],
@@ -243,11 +251,33 @@ class Broker:
         self._staged_records += len(records)
         if arrival is not None and self._staged_first_arrival is None:
             self._staged_first_arrival = arrival
+            self._arm_deadline(arrival)
         self.appends += 1
         if (self._staged_records >= cfg.max_records
                 or self._staged_bytes >= cfg.max_bytes):
             self._auto_flush(arrival)
         return pending
+
+    def _arm_deadline(self, first_arrival: float) -> None:
+        """Register a clock-driven ``max_delay`` flush (§9 bugfix). The seed
+        deadline check lived inside ``stage()``, so it only fired when the
+        NEXT record arrived — an idle staged batch could sit past its
+        deadline indefinitely. With a fault plane attached, its DES-time
+        callback queue fires the flush from ``advance()`` instead; the
+        stage-epoch guard makes a callback for an already-flushed (or
+        failed-over) batch a no-op."""
+        plane = self.faults
+        cfg = self.group_commit
+        if plane is None or cfg is None:
+            return
+        epoch = self._stage_epoch
+        deadline = first_arrival + cfg.max_delay
+        plane.call_at(deadline, lambda: self._deadline_flush(epoch, deadline))
+
+    def _deadline_flush(self, epoch: int, deadline: float) -> None:
+        if epoch != self._stage_epoch or not self._staged:
+            return
+        self._auto_flush(deadline)
 
     def _auto_flush(self, arrival: Optional[float]) -> None:
         """A threshold/deadline flush from inside ``stage()``. The record is
@@ -279,6 +309,7 @@ class Broker:
         self._staged_bytes = 0
         self._staged_records = 0
         self._staged_first_arrival = None
+        self._stage_epoch += 1
         writer = SegmentWriter()
         slices = []   # (pending, entry_index, start slot within the entry)
         for pending, records in staged:
@@ -369,6 +400,7 @@ class Broker:
         self._staged_bytes = 0
         self._staged_records = 0
         self._staged_first_arrival = None
+        self._stage_epoch += 1
         return staged
 
     def adopt_staging(self, staged) -> None:
@@ -395,6 +427,7 @@ class Broker:
         self._staged_bytes = 0
         self._staged_records = 0
         self._staged_first_arrival = None
+        self._stage_epoch += 1
         for pending, _records in staged:
             pending._fail(AgileLogError(
                 f"broker {self.broker_id} failed before flush; append not committed"),
@@ -406,7 +439,8 @@ class Broker:
             self.flush()
 
     def _cached_read(self, spans, arrival: Optional[float],
-                     meta_cached: bool = False) -> Tuple[List[bytes], float]:
+                     meta_cached: bool = False,
+                     lease_read: bool = False) -> Tuple[List[bytes], float]:
         """Scatter-gather the spans through the page cache; book broker CPU on
         the bytes *returned* but store GETs only on what was actually
         *fetched* (ranged GETs, not whole-object fills — DESIGN.md §10)."""
@@ -421,27 +455,33 @@ class Broker:
                           get_ops=self.cache.ranged_gets - g0,
                           meta_cached=meta_cached,
                           cold_get_ops=getattr(self.store, "cold_gets", 0) - cg0,
-                          cold_fetch_bytes=getattr(self.store, "cold_bytes_read", 0) - cb0)
+                          cold_fetch_bytes=getattr(self.store, "cold_bytes_read", 0) - cb0,
+                          lease_read=lease_read)
         return blobs, done
 
     def _resolve_spans(self, log_id: int, lo: int, hi: int,
-                       per_record: bool) -> Tuple[List, bool]:
+                       per_record: bool) -> Tuple[List, bool, bool]:
         """Metadata resolution plus whether the flattened-view fast path
-        served it (§11) — the DES model books a cheaper metadata op for
-        cached lookups than for exact chain walks."""
-        state = self.metadata.state
+        served it (§11) and whether the lease fast path skipped consensus
+        (§18) — the DES model books a cheaper metadata op for each."""
+        meta = self.metadata
+        l0 = getattr(meta, "lease_reads", 0)
+        reader = getattr(meta, "read_state", None)
+        state = reader() if reader is not None else meta.state
+        lease_read = getattr(meta, "lease_reads", 0) > l0
         c0 = state.stats.cached_reads
         if per_record:
             spans = state.read_record_spans(log_id, lo, hi)
         else:
             spans = state.read_spans(log_id, lo, hi)
-        return spans, state.stats.cached_reads > c0
+        return spans, state.stats.cached_reads > c0, lease_read
 
     def read(self, log_id: int, lo: int, hi: int,
              arrival: Optional[float] = None) -> Tuple[List[bytes], float]:
         self._flush_if_staged(log_id)
-        spans, meta_cached = self._resolve_spans(log_id, lo, hi, per_record=False)
-        out = self._cached_read(spans, arrival, meta_cached)
+        spans, meta_cached, lease = self._resolve_spans(log_id, lo, hi,
+                                                        per_record=False)
+        out = self._cached_read(spans, arrival, meta_cached, lease)
         self._note_cold_scan(spans, hi - lo, arrival)
         return out
 
@@ -449,8 +489,9 @@ class Broker:
                      arrival: Optional[float] = None) -> Tuple[List[bytes], float]:
         """Read and return individual records (one span per record)."""
         self._flush_if_staged(log_id)
-        spans, meta_cached = self._resolve_spans(log_id, lo, hi, per_record=True)
-        out = self._cached_read(spans, arrival, meta_cached)
+        spans, meta_cached, lease = self._resolve_spans(log_id, lo, hi,
+                                                        per_record=True)
+        out = self._cached_read(spans, arrival, meta_cached, lease)
         self._note_cold_scan(spans, hi - lo, arrival)
         return out
 
@@ -471,22 +512,45 @@ class Broker:
             tiers.note_scan(cold, n_records, arrival)
 
     # -- DES accounting -----------------------------------------------------------
+    def _store_rates(self):
+        """Resolve the store cost model (§18): a backend carrying a
+        ``StoreProfile`` books its own rates; ``None`` (memory/tiered) means
+        the global ``ServiceTimes`` store rates — the pre-§18 model,
+        byte-identical for every existing benchmark."""
+        prof = getattr(self.store, "profile", None)
+        s = self.service
+        if prof is None:
+            return (s.store_put_base, s.store_put_per_kb,
+                    s.store_get_base, s.store_get_per_kb,
+                    s.store_delete_base, 0)
+        return (prof.put_base, prof.put_per_kb, prof.get_base,
+                prof.get_per_kb, prof.delete_base, prof.min_get_bytes)
+
     def _book(self, arrival: Optional[float], write_bytes: int = 0,
               read_bytes: int = 0, fetch_bytes: Optional[int] = None,
               get_ops: Optional[int] = None,
               meta_cached: bool = False,
-              cold_get_ops: int = 0, cold_fetch_bytes: int = 0) -> float:
+              cold_get_ops: int = 0, cold_fetch_bytes: int = 0,
+              lease_read: bool = False) -> float:
         """`read_bytes` is what the client receives (broker CPU touches it);
         `fetch_bytes`/`get_ops` are the actual store traffic — cache hits cost
         no store time, and one coalesced ranged GET costs one `store_get_base`,
         however many spans it served. They default to the pre-cache model
         (every read is one whole GET) when not supplied. `meta_cached` books
-        the flattened-view lookup cost instead of the chain-walk one (§11).
-        `cold_get_ops`/`cold_fetch_bytes` split out the GETs the cold store
-        class served — those are charged at the archive rates (§14)."""
+        the flattened-view lookup cost instead of the chain-walk one (§11);
+        `lease_read` books the consensus-free lease-local read (§18), which
+        beats both. `cold_get_ops`/`cold_fetch_bytes` split out the GETs the
+        cold store class served — those are charged at the archive rates
+        (§14). Store rates come from the backend's profile when it has one;
+        ``min_get_bytes`` bills every hot ranged GET at least its floor.
+        With ``pipelined_io``, a write's metadata propose overlaps the PUT:
+        the ack waits for max(PUT completion, propose round) instead of
+        their sum (§18 — execution order is still PUT-then-propose)."""
         if self.sim is None or arrival is None:
             return 0.0
         s = self.service
+        put_base, put_per_kb, get_base, get_per_kb, _del_base, min_get = \
+            self._store_rates()
         t = arrival
         cpu_time = s.broker_cpu_per_req + s.broker_cpu_per_kb * (write_bytes + read_bytes) / 1024
         t = self.cpu.submit(t, cpu_time)
@@ -496,16 +560,26 @@ class Broker:
             get_ops = 1 if fetch_bytes else 0
         hot_ops = max(0, get_ops - cold_get_ops)
         hot_bytes = max(0, fetch_bytes - cold_fetch_bytes)
+        meta_time = (s.metadata_op_lease if lease_read
+                     else s.metadata_op_cached if meta_cached
+                     else s.metadata_op)
         if self.store_resource is not None:
             if write_bytes:
-                t = self.store_resource.submit(t, s.store_put_base + s.store_put_per_kb * write_bytes / 1024)
+                put_done = self.store_resource.submit(
+                    t, put_base + put_per_kb * write_bytes / 1024)
+                if self.pipelined_io:
+                    t = max(put_done, t + meta_time)
+                    meta_time = 0.0          # propose overlapped the PUT
+                else:
+                    t = put_done
             if hot_ops:
+                billed = max(hot_bytes, hot_ops * min_get)
                 t = self.store_resource.submit(
-                    t, hot_ops * s.store_get_base + s.store_get_per_kb * hot_bytes / 1024)
+                    t, hot_ops * get_base + get_per_kb * billed / 1024)
             if cold_get_ops:
                 t = self.store_resource.submit(
                     t, cold_get_ops * s.cold_get_base + s.cold_get_per_kb * cold_fetch_bytes / 1024)
-        t += (s.metadata_op_cached if meta_cached else s.metadata_op) + s.net_rtt
+        t += meta_time + s.net_rtt
         return t
 
     def book_reclaim(self, arrival: Optional[float], n_deletes: int) -> float:
@@ -518,9 +592,10 @@ class Broker:
         if self.sim is None or arrival is None:
             return 0.0
         s = self.service
+        _pb, _pk, _gb, _gk, delete_base, _mg = self._store_rates()
         t = self.cpu.submit(arrival, s.broker_cpu_per_req * max(1, n_deletes))
         if self.store_resource is not None and n_deletes:
-            t = self.store_resource.submit(t, n_deletes * s.store_delete_base)
+            t = self.store_resource.submit(t, n_deletes * delete_base)
         t += s.metadata_op + s.net_rtt
         return t
 
@@ -534,15 +609,18 @@ class Broker:
         if self.sim is None or arrival is None:
             return 0.0
         s = self.service
+        put_base, put_per_kb, get_base, get_per_kb, _db, min_get = \
+            self._store_rates()
         cpu_time = s.broker_cpu_per_req + s.broker_cpu_per_kb * (read_bytes + write_bytes) / 1024
         t = self.cpu.submit(arrival, cpu_time)
         if self.store_resource is not None:
             if n_gets:
+                billed = max(read_bytes, n_gets * min_get)
                 t = self.store_resource.submit(
-                    t, n_gets * s.store_get_base + s.store_get_per_kb * read_bytes / 1024)
+                    t, n_gets * get_base + get_per_kb * billed / 1024)
             if write_bytes:
                 t = self.store_resource.submit(
-                    t, s.store_put_base + s.store_put_per_kb * write_bytes / 1024)
+                    t, put_base + put_per_kb * write_bytes / 1024)
         t += s.metadata_op + s.net_rtt
         return t
 
@@ -578,7 +656,8 @@ class KafkaLikeBroker(Broker):
               read_bytes: int = 0, fetch_bytes: Optional[int] = None,
               get_ops: Optional[int] = None,
               meta_cached: bool = False,
-              cold_get_ops: int = 0, cold_fetch_bytes: int = 0) -> float:
+              cold_get_ops: int = 0, cold_fetch_bytes: int = 0,
+              lease_read: bool = False) -> float:
         # Every read is served from this broker's local disk: the page cache's
         # fetch accounting (fetch_bytes/get_ops) must NOT exempt the baseline
         # — a free RAM cache here would understate the very read contention

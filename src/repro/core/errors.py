@@ -41,6 +41,26 @@ class ConflictError(AgileLogError):
         self.holds_epoch = holds_epoch  # metadata holds_version at the check
 
 
+class ObjectMissing(AgileLogError, KeyError):
+    """A GET/ranged-GET named an object key the store does not hold.
+
+    Every backend raises this one type (DESIGN.md §18) — the seed backends
+    leaked their implementation's native miss (`KeyError` from the dict-backed
+    stores, `FileNotFoundError` from the file store), so a caller that caught
+    one silently missed the other. Deterministic, not transient: the key is
+    gone (reaped, never written, or torn and swept) and retrying will not
+    bring it back. Subclasses ``KeyError`` so pre-§18 external callers that
+    caught the memory backend's miss keep working.
+    """
+
+    def __init__(self, key=None) -> None:
+        super().__init__(f"object missing: {key!r}")
+        self.key = key
+
+    def __str__(self) -> str:        # KeyError.__str__ repr()s the arg
+        return self.args[0]
+
+
 class Unavailable(AgileLogError):
     """A layer of the system cannot serve the request *right now* (DESIGN.md
     §15). Unlike the deterministic command errors above, unavailability is

@@ -291,6 +291,8 @@ class FaultPlane:
         self.events_fired: list = []
         self._system = None           # bound BoltSystem (for schedules)
         self.net = Network(self)      # §16 message-level network
+        self._timers: list = []       # heap of (time, seq, fn) callbacks
+        self._timer_seq = 0
 
     # -- wiring --------------------------------------------------------------
     def bind(self, system) -> None:
@@ -349,14 +351,26 @@ class FaultPlane:
             raise StoreFault(f"injected DELETE failure for {key}")
 
     # -- DES-time schedules --------------------------------------------------
+    def call_at(self, time: float, fn) -> None:
+        """Register a one-shot callback to fire when the DES clock reaches
+        ``time`` (via :meth:`advance`). This is how layers turn *deadlines*
+        into clock-driven actions — e.g. the group-commit ``max_delay`` flush
+        (§9 bugfix): before this hook, an idle staged record's deadline only
+        fired when the NEXT record happened to arrive. Callbacks at the same
+        time fire in registration order; a ``time`` already in the past fires
+        on the next ``advance()`` call."""
+        heapq.heappush(self._timers, (time, self._timer_seq, fn))
+        self._timer_seq += 1
+
     def advance(self, now: float) -> int:
         """Advance the DES clock: deliver due in-flight network messages,
         then fire every scheduled event with time <= ``now`` (kill/recover
-        kinds require :meth:`bind`). Deliveries drain before events at the
-        same clock reading (they were sent strictly earlier); events sharing
-        a timestamp fire in original schedule order. Returns how many
-        SCHEDULE events fired. Kills of already-dead targets are no-ops, so
-        schedules compose with probabilistic crashes."""
+        kinds require :meth:`bind`), then due :meth:`call_at` callbacks.
+        Deliveries drain before events at the same clock reading (they were
+        sent strictly earlier); events sharing a timestamp fire in original
+        schedule order. Returns how many SCHEDULE events fired. Kills of
+        already-dead targets are no-ops, so schedules compose with
+        probabilistic crashes."""
         self.now = max(self.now, now)
         self.net.pump(self.now)
         fired = 0
@@ -366,6 +380,9 @@ class FaultPlane:
             self.events_fired.append((t, kind, target))
             self.note("schedule_" + kind)
             fired += 1
+        while self._timers and self._timers[0][0] <= now:
+            _t, _seq, fn = heapq.heappop(self._timers)
+            fn()
         return fired
 
     def _dispatch(self, kind: str, target) -> None:

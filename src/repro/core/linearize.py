@@ -40,6 +40,7 @@ recorded histories' scope.
 
 from __future__ import annotations
 
+import sys
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
 
@@ -220,6 +221,11 @@ def check_history(ops: List[Op], bases: Dict[int, int]) -> LinearizeResult:
     ops = sorted(ops, key=lambda o: (o.call, o.opid))
     init = {lid: (None, base, ()) for lid, base in bases.items()}
     seen = set()
+    # the search keeps one frame per linearized op, so depth is linear in
+    # history length — benchmark-scale traces (§18 lease-read histories run
+    # thousands of ops) need headroom past the interpreter default
+    limit = sys.getrecursionlimit()
+    sys.setrecursionlimit(max(limit, 2 * len(ops) + 1000))
 
     def minimal(remaining: frozenset) -> List[Op]:
         """Ops that may linearize next: nothing still pending responded
@@ -246,7 +252,11 @@ def check_history(ops: List[Op], bases: Dict[int, int]) -> LinearizeResult:
                     return True
         return False
 
-    if search(frozenset(o.opid for o in ops), init):
+    try:
+        ok = search(frozenset(o.opid for o in ops), init)
+    finally:
+        sys.setrecursionlimit(limit)
+    if ok:
         return LinearizeResult(True, None, None)
     return LinearizeResult(
         False, None,

@@ -1,12 +1,31 @@
 """S3-like object store backends (the diskless "shared storage" layer, §5.2).
 
-Bolt brokers are stateless: durability lives here. Two backends are provided:
+Bolt brokers are stateless: durability lives here. The backend protocol
+(DESIGN.md §18) is the abstract :class:`ObjectStore` plus, per backend:
 
-* :class:`MemoryObjectStore` — dict-backed, used by tests/benchmarks.
-* :class:`FileObjectStore`   — one file per object under a root dir; used by the
-  checkpoint substrate so training state and log data share one storage layer.
+* a uniform **miss type** — every GET of an absent key raises
+  :class:`~repro.core.errors.ObjectMissing`, never the backend's native error;
+* the **fault hooks** (`_fault_put`/`_fault_get`/`_fault_delete`) consulted at
+  every entry point, so the §15 plane exercises all backends identically;
+* the **op counters** ``put_count``/``get_count``/``delete_count`` and
+  ``bytes_written``/``bytes_read``/``bytes_deleted`` that ``OpTally`` captures;
+* an optional DES cost :class:`StoreProfile` — brokers book store service
+  times from it when present, falling back to the global ``ServiceTimes``
+  store rates when it is ``None`` (the memory/tiered backends, keeping every
+  pre-§18 benchmark byte-identical).
 
-Both support ranged GETs, which is what brokers use to fetch a single record
+Backends:
+
+* :class:`MemoryObjectStore` — dict-backed; the default for tests/benchmarks.
+* :class:`TieredObjectStore` — hot + compressed cold store classes (§14).
+* :class:`FileObjectStore`   — one file per object under a root dir, atomic
+  tmp+rename PUTs with file *and directory* fsync; shared with checkpoints.
+* :class:`RangedStore`       — S3-shaped cost model: high per-op latency, high
+  throughput (tiny per-KB cost), and a ranged-GET *minimum billable size* —
+  a 1 KB ranged GET costs the same as ``min_get_bytes`` (the
+  latency-vs-throughput asymmetry real object stores have).
+
+All support ranged GETs, which is what brokers use to fetch a single record
 out of a large multi-record object.
 """
 
@@ -16,11 +35,51 @@ import os
 import threading
 import zlib
 from collections import OrderedDict
+from dataclasses import dataclass
 from typing import Dict, Iterable, List, Optional, Tuple
+
+from .errors import ObjectMissing
+
+
+@dataclass(frozen=True)
+class StoreProfile:
+    """Per-backend DES service-time profile (DESIGN.md §18).
+
+    Brokers resolve store costs through ``store.profile`` when one is set;
+    ``None`` (memory/tiered) means "use the global ``ServiceTimes`` store
+    rates" — the seed cost model, unchanged. ``min_get_bytes`` models the
+    ranged-GET minimum of S3-class stores: every GET is billed at least that
+    many bytes of transfer time, so tiny ranged reads pay the asymmetry.
+    """
+
+    put_base: float = 1.5e-3        # per-PUT latency floor (s)
+    put_per_kb: float = 2e-6        # PUT transfer time per KiB
+    get_base: float = 0.6e-3        # per-GET latency floor (s)
+    get_per_kb: float = 1e-6        # GET transfer time per KiB
+    delete_base: float = 0.5e-3     # per-DELETE latency (s)
+    min_get_bytes: int = 0          # ranged-GET minimum billable size
+
+
+#: Local-file backend: fsync dominates the PUT floor (file + parent dir),
+#: but there is no network — per-KB transfer is cheap and GETs are page-cache
+#: fast. The first *honest* durable-ack cost model in the repo.
+FILE_PROFILE = StoreProfile(put_base=120e-6, put_per_kb=0.5e-6,
+                            get_base=20e-6, get_per_kb=0.25e-6,
+                            delete_base=30e-6, min_get_bytes=0)
+
+#: S3-style backend: milliseconds of per-op latency, near-free marginal
+#: bytes (high throughput), and a ranged-GET minimum — the classic object
+#: store latency-vs-throughput asymmetry.
+RANGED_PROFILE = StoreProfile(put_base=8e-3, put_per_kb=0.05e-6,
+                              get_base=12e-3, get_per_kb=0.04e-6,
+                              delete_base=4e-3, min_get_bytes=128 << 10)
 
 
 class ObjectStore:
-    """Abstract S3-ish KV-of-bytes interface."""
+    """Abstract S3-ish KV-of-bytes interface (backend protocol, §18)."""
+
+    #: Optional DES cost profile; ``None`` = global ServiceTimes store rates.
+    profile: Optional[StoreProfile] = None
 
     #: Optional fault plane (DESIGN.md §15): backends consult it at their
     #: PUT/GET/DELETE entry points so injected store errors and torn partial
@@ -102,7 +161,9 @@ class MemoryObjectStore(ObjectStore):
     def get(self, key: str, offset: int = 0, length: Optional[int] = None) -> bytes:
         self._fault_get(key)
         with self._lock:
-            obj = self._objects[key]
+            obj = self._objects.get(key)
+            if obj is None:
+                raise ObjectMissing(key)
             self.get_count += 1
             end = len(obj) if length is None else offset + length
             out = obj[offset:end]
@@ -189,7 +250,10 @@ class TieredObjectStore(ObjectStore):
             obj = self._hot.get(key)
             cold = obj is None
             if cold:
-                obj = zlib.decompress(self._cold[key])
+                packed = self._cold.get(key)
+                if packed is None:
+                    raise ObjectMissing(key)
+                obj = zlib.decompress(packed)
             self.get_count += 1
             end = len(obj) if length is None else offset + length
             out = obj[offset:end]
@@ -294,13 +358,32 @@ class TieredObjectStore(ObjectStore):
 class FileObjectStore(ObjectStore):
     """Filesystem-backed store; object keys map to files (slashes allowed).
 
-    Writes are atomic (write to tmp + rename) so a crash mid-PUT never leaves a
-    torn object — the property the checkpoint manifest protocol relies on.
+    Writes are atomic and durable: write to tmp, fsync the file, rename over
+    the target, then fsync the *parent directory* — the rename itself is only
+    durable once the directory entry is, which is the property the checkpoint
+    manifest protocol relies on (a manifest PUT that acked must survive a
+    crash). Opening a root sweeps ``*.tmp`` carcasses left by PUTs that
+    crashed before their rename, mirroring ``SegmentCollector.resync()``'s
+    orphan sweep: a tmp file is by construction un-acked and unreferenced.
     """
+
+    profile = FILE_PROFILE
 
     def __init__(self, root: str) -> None:
         self.root = root
         os.makedirs(root, exist_ok=True)
+        self.put_count = 0
+        self.get_count = 0
+        self.delete_count = 0
+        self.bytes_written = 0
+        self.bytes_read = 0
+        self.bytes_deleted = 0
+        self.tmp_swept = 0          # crash carcasses removed on open
+        for dirpath, _dirnames, filenames in os.walk(self.root):
+            for fn in filenames:
+                if fn.endswith(".tmp"):
+                    os.remove(os.path.join(dirpath, fn))
+                    self.tmp_swept += 1
 
     def _path(self, key: str) -> str:
         path = os.path.join(self.root, key)
@@ -308,26 +391,54 @@ class FileObjectStore(ObjectStore):
             raise ValueError(f"key escapes store root: {key!r}")
         return path
 
-    def put(self, key: str, data: bytes) -> None:
+    @staticmethod
+    def _fsync_dir(path: str) -> None:
+        fd = os.open(path, os.O_RDONLY)
+        try:
+            os.fsync(fd)
+        finally:
+            os.close(fd)
+
+    def _commit_put(self, key: str, data: bytes) -> None:
         path = self._path(key)
-        os.makedirs(os.path.dirname(path), exist_ok=True)
+        parent = os.path.dirname(path)
+        os.makedirs(parent, exist_ok=True)
         tmp = path + ".tmp"
         with open(tmp, "wb") as f:
             f.write(data)
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, path)
+        self._fsync_dir(parent)
+        self.put_count += 1
+        self.bytes_written += len(data)
+
+    def put(self, key: str, data: bytes) -> None:
+        self._commit_put(key, self._fault_put(key, data))
 
     def get(self, key: str, offset: int = 0, length: Optional[int] = None) -> bytes:
-        with open(self._path(key), "rb") as f:
+        self._fault_get(key)
+        try:
+            f = open(self._path(key), "rb")
+        except FileNotFoundError:
+            raise ObjectMissing(key) from None
+        with f:
             f.seek(offset)
-            return f.read(length) if length is not None else f.read()
+            out = f.read(length) if length is not None else f.read()
+        self.get_count += 1
+        self.bytes_read += len(out)
+        return out
 
     def delete(self, key: str) -> None:
+        self._fault_delete(key)
+        path = self._path(key)
         try:
-            os.remove(self._path(key))
+            freed = os.path.getsize(path)
+            os.remove(path)
         except FileNotFoundError:
-            pass
+            return
+        self.delete_count += 1
+        self.bytes_deleted += freed
 
     def exists(self, key: str) -> bool:
         return os.path.exists(self._path(key))
@@ -348,6 +459,36 @@ class FileObjectStore(ObjectStore):
                 if rel.startswith(prefix):
                     out.append(rel)
         return sorted(out)
+
+    @property
+    def total_bytes(self) -> int:
+        total = 0
+        for dirpath, _dirnames, filenames in os.walk(self.root):
+            for fn in filenames:
+                if not fn.endswith(".tmp"):
+                    total += os.path.getsize(os.path.join(dirpath, fn))
+        return total
+
+
+class RangedStore(MemoryObjectStore):
+    """S3-shaped backend: memory-backed semantics with the S3 *cost model*
+    (DESIGN.md §18) — milliseconds of per-op latency, near-free marginal
+    bytes, and a ranged-GET minimum billable size. ``billed_read_bytes``
+    tracks what the DES model charges (each GET at least
+    ``profile.min_get_bytes``) next to the logical ``bytes_read``, so
+    benchmarks can show the asymmetry a page-granular cache must amortize.
+    """
+
+    profile = RANGED_PROFILE
+
+    def __init__(self) -> None:
+        super().__init__()
+        self.billed_read_bytes = 0
+
+    def get(self, key: str, offset: int = 0, length: Optional[int] = None) -> bytes:
+        out = super().get(key, offset, length)
+        self.billed_read_bytes += max(len(out), self.profile.min_get_bytes)
+        return out
 
 
 class SegmentWriter:

@@ -290,6 +290,8 @@ class MetadataService:
         self._next_index: Dict[Tuple[int, int], int] = {}
         self._electing = False       # reentrancy guard (election -> noop
                                      # barrier -> NoQuorum -> election ...)
+        self.lease_reads = 0         # reads served by the lease fast path (§18)
+        self.lease_fallbacks = 0     # reads that took the slow/barrier path
         self.replicas[0].is_leader = True
 
     # -- leadership ------------------------------------------------------------
@@ -776,6 +778,61 @@ class MetadataService:
         if self.faults is not None:
             self._read_barrier()
         return self.leader.state
+
+    # -- lease-read fast path (DESIGN.md §18) ----------------------------------
+    def read_state(self) -> MetadataState:
+        """Client-facing read entry point: serve from the leader's local
+        state with NO consensus traffic while its lease covers the read.
+
+        The fast path requires all of: the leader is alive and believes it
+        leads, the DES clock has not passed its lease horizon, and its log
+        has no uncommitted suffix. The last condition is the linearizability
+        guard the lease alone cannot give — a freshly elected leader holds a
+        lease immediately, but until its no-op barrier commits, its commit
+        index may lag entries the OLD leader acked (raft §8); reading then
+        could miss an acked write. ``last_index <= commit_index`` is exactly
+        "the barrier has landed", so the lease read returns precisely what a
+        barrier read would — at two int compares and a clock check instead
+        of a replication round.
+
+        Any condition failing falls back to :meth:`_read_state_slow`, which
+        re-elects / re-barriers / renews the lease under the client
+        ``RetryPolicy`` — the ``LeaseExpired``/``NotLeader`` fallback rule.
+        Without a fault plane there is no clock and no lease to fence on;
+        reads stay on the plain leader-local path (pre-§18, byte-identical).
+        """
+        plane = self.faults
+        if plane is None:
+            return self.leader.state
+        L = self.leader
+        if (L.alive and L.is_leader and plane.now <= L.lease_until
+                and L.last_index <= L.commit_index):
+            self.lease_reads += 1
+            L.apply_pending()
+            return L.state
+        self.lease_fallbacks += 1
+        return self._read_state_slow()
+
+    def _read_state_slow(self) -> MetadataState:
+        """Lease-read fallback: drive whatever the fast path found missing —
+        a dead/deposed leader re-elects, a lingering uncommitted suffix
+        re-runs the barrier, an expired lease renews through one committed
+        no-op ack round (commit extends the lease, §16) — then serve through
+        ``read_fenced()``. Runs under the client retry policy: a partitioned
+        minority leader keeps failing here until the partition heals or the
+        retry budget raises ``RetryBudgetExhausted``."""
+        plane = self.faults
+
+        def attempt(_n: int) -> MetadataState:
+            if not self.leader.alive or not self.leader.is_leader:
+                self._elect_msg()
+            self._read_barrier()
+            if plane.now > self.leader.lease_until:
+                self._propose_once(("noop",))   # committed ack round renews
+            return self.read_fenced()
+
+        return run_with_retries(attempt, self.retry, plane.rng,
+                                stats=self.retry_stats)
 
     def check_convergence(self) -> bool:
         """All alive replicas have identical applied state (test hook).

@@ -180,6 +180,8 @@ class OpTally:
     serve_tokens_accepted: int = 0  # draft tokens verification accepted (§17)
     serve_tokens_rejected: int = 0  # draft tokens squashed, no trace (§17)
     serve_reanchors: int = 0    # rollout commits re-anchored over a moved tail
+    lease_reads: int = 0        # reads served by the lease fast path (§18)
+    lease_fallbacks: int = 0    # lease reads that fell back to the barrier (§18)
 
     @classmethod
     def capture(cls, system, records: int = 0) -> "OpTally":
@@ -223,7 +225,10 @@ class OpTally:
                    serve_tokens_out=serve.tokens_out,
                    serve_tokens_accepted=serve.tokens_accepted,
                    serve_tokens_rejected=serve.tokens_rejected,
-                   serve_reanchors=serve.reanchors)
+                   serve_reanchors=serve.reanchors,
+                   lease_reads=getattr(system.metadata, "lease_reads", 0),
+                   lease_fallbacks=getattr(system.metadata,
+                                           "lease_fallbacks", 0))
 
     def delta(self, since: "OpTally") -> "OpTally":
         return OpTally(records=self.records - since.records,
@@ -262,7 +267,10 @@ class OpTally:
                                               - since.serve_tokens_accepted),
                        serve_tokens_rejected=(self.serve_tokens_rejected
                                               - since.serve_tokens_rejected),
-                       serve_reanchors=self.serve_reanchors - since.serve_reanchors)
+                       serve_reanchors=self.serve_reanchors - since.serve_reanchors,
+                       lease_reads=self.lease_reads - since.lease_reads,
+                       lease_fallbacks=(self.lease_fallbacks
+                                        - since.lease_fallbacks))
 
     @property
     def proposals_per_record(self) -> float:
@@ -293,6 +301,9 @@ class ServiceTimes:
     metadata_op: float = 12e-6             # sequencing round at metadata layer
     metadata_op_cached: float = 4e-6       # lookup served by a flattened view
                                            # (§11: bisect + slice, no chain walk)
+    metadata_op_lease: float = 1.5e-6      # lease-fenced local read (§18): no
+                                           # consensus round, no barrier — a
+                                           # clock check + local state apply
     net_rtt: float = 60e-6
     cold_get_base: float = 5e-3            # archive-class ranged GET (§14):
     cold_get_per_kb: float = 8e-6          # slower first byte + decompression

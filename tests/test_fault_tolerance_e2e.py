@@ -260,6 +260,109 @@ def test_linearizable_under_faults(group_commit, seed):
 
 
 # ---------------------------------------------------------------------------
+# lease-read fast path (DESIGN.md §18): consensus-free reads, proven
+# linearizable by the §16 checker — including across a partition where the
+# lease fences the deposed leader and the fallback re-elects
+# ---------------------------------------------------------------------------
+
+class _LeaseHistory:
+    """Record client appends/reads into a ``History`` for the §16 checker."""
+
+    def __init__(self, log):
+        self.log = log
+        self.hist = History()
+        self.hist.register_log(log.log_id, 0)
+
+    def append(self, rec: bytes) -> None:
+        op = self.hist.invoke("append", self.log.log_id, (rec,))
+        self.hist.resolve(op, tuple(self.log.append(rec).positions()))
+
+    def read(self) -> None:
+        hi = self.log.tail
+        op = self.hist.invoke("read", self.log.log_id, (0, hi))
+        self.hist.resolve(op, tuple(self.log.read(0, hi)))
+
+    def check(self) -> None:
+        verdict = self.hist.check()
+        assert verdict.ok, verdict.reason
+
+
+def test_lease_reads_skip_consensus_on_fast_path():
+    """Steady state: every tail/read is served locally under the leader's
+    lease — ZERO proposals, zero barrier no-ops — and the recorded history
+    still linearizes."""
+    system = BoltSystem(n_brokers=2, faults=True)
+    meta = system.metadata
+    run = _LeaseHistory(system.create_log("r"))
+    for i in range(10):
+        run.append(f"r{i}".encode())
+    p0, l0 = meta.proposals, meta.lease_reads
+    for _ in range(8):
+        run.read()
+        assert run.log.tail == 10
+    assert meta.proposals == p0            # reads rode NO consensus round
+    assert meta.lease_reads > l0
+    assert meta.lease_fallbacks == 0
+    run.check()
+
+
+def test_lease_reads_linearizable_across_partition():
+    """A minority-partitioned leader's lease lapses on the DES clock; the
+    read falls back (LeaseExpired path), the majority side elects, the
+    renewed lease re-arms the fast path — and every read in the history
+    linearizes against the committed log."""
+    system = BoltSystem(n_brokers=2, n_meta_replicas=5,
+                        faults=FaultConfig(seed=3),
+                        retry=RetryPolicy(attempts=8))
+    plane, meta = system.faults, system.metadata
+    run = _LeaseHistory(system.create_log("r"))
+    for i in range(3):
+        run.append(f"a{i}".encode())
+    run.read()
+    old = meta.leader_id
+    minority = [old, (old + 1) % 5]
+    majority = [r for r in range(5) if r not in minority]
+    system.partition(minority, majority)
+    # past the deposed leader's lease horizon its local reads are fenced
+    plane.advance(meta.replicas[old].lease_until + 0.01)
+    f0 = meta.lease_fallbacks
+    run.read()                              # falls back + fails over
+    assert meta.lease_fallbacks > f0
+    assert meta.leader_id in majority
+    for i in range(3):
+        run.append(f"b{i}".encode())        # majority side serves writes
+    # committed ack rounds renewed the new leader's lease: fast path resumes
+    p0, l0 = meta.proposals, meta.lease_reads
+    run.read()
+    assert meta.lease_reads > l0 and meta.proposals == p0
+    system.heal_network()
+    meta.sync_followers()
+    run.read()
+    run.check()
+    assert meta.check_convergence()
+
+
+def test_lease_read_never_misses_acked_write():
+    """The fast path's ``last_index <= commit_index`` guard: a fresh leader
+    holds a lease immediately, but until the no-op barrier lands its local
+    state may miss entries the old leader committed — the read must take the
+    barrier path, not serve the stale lease read."""
+    system = BoltSystem(n_brokers=2, n_meta_replicas=5,
+                        faults=FaultConfig(seed=11),
+                        retry=RetryPolicy(attempts=8))
+    meta = system.metadata
+    run = _LeaseHistory(system.create_log("r"))
+    for i in range(5):
+        run.append(f"r{i}".encode())
+    # crash the leader: the winner's election barrier may or may not have
+    # committed — read_state() must return the full acked prefix either way
+    meta.fail_replica(meta.leader_id)
+    run.read()
+    assert run.log.tail == 5
+    run.check()
+
+
+# ---------------------------------------------------------------------------
 # the acceptance scenario, pinned at a fixed seed (CI fast lane)
 # ---------------------------------------------------------------------------
 

@@ -110,6 +110,33 @@ def test_des_time_deadline_flushes_old_batch():
     assert p3.result() == [2]
 
 
+def test_idle_deadline_flushes_from_clock_advance():
+    """§9 bugfix regression (ISSUE 10): the ``max_delay`` deadline must fire
+    from DES clock advance alone. The seed check lived inside ``stage()``, so
+    an idle staged record sat past its deadline until the NEXT record
+    arrived — with a fault plane attached, the deadline is now a
+    ``call_at`` callback fired by ``plane.advance()``."""
+    cfg = GroupCommitConfig(max_records=1000, max_delay=1e-3)
+    system = BoltSystem(group_commit=cfg, faults=True)
+    plane = system.faults
+    broker = system.brokers[0]
+    log = system.create_log("x")
+    p1 = broker.stage(log.log_id, [b"a"], arrival=0.0)
+    plane.advance(0.5e-3)                    # before the deadline: staged
+    assert not p1.done
+    plane.advance(2e-3)                      # past it: flushes, NO new record
+    assert p1.done
+    assert p1.result() == [0]
+    assert log.read(0, 1) == [b"a"]
+    # a deadline armed for an already-flushed batch is a no-op (epoch guard)
+    p2 = broker.stage(log.log_id, [b"b"], arrival=3e-3)
+    broker.flush()                           # explicit flush first
+    flushes = broker.flushes
+    plane.advance(10e-3)                     # stale callback fires harmlessly
+    assert broker.flushes == flushes
+    assert p2.result() == [1]
+
+
 def test_receipt_wait_forces_flush():
     system = BoltSystem(group_commit=GroupCommitConfig(max_records=1000))
     log = system.create_log("x")
